@@ -1,0 +1,369 @@
+"""One benchmark per paper table/figure (RAGO §5 and §7).
+
+Every function returns a list of CSV rows (name, value, note).  Paper-claim
+anchors are emitted as ``check:`` rows with the paper value alongside ours.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import cost_model as cmod
+from repro.core import optimizer as opt
+from repro.core import stages as st
+from repro.core.hardware import EPYC_MILAN, XPUS, SystemConfig, XPU_C
+from repro.core.pipeline_sim import simulate_iterative_decode
+from repro.core.ragschema import (MODELS, RAGSchema, case_I, case_II,
+                                  case_III, case_IV, llm_only)
+from repro.core.retrieval_model import query_bytes, retrieval_perf
+
+SYS = SystemConfig(n_servers=32, xpu=XPU_C)
+
+
+def _row(name, value, note=""):
+    return (name, f"{value:.6g}" if isinstance(value, float) else str(value),
+            note)
+
+
+def _breakdown(schema: RAGSchema, sys: SystemConfig = SYS,
+               chips_per_stage: int = 64, batch: int = 32) -> dict:
+    """Paper §5 time-x-resource breakdown (server-seconds per request).
+
+    Inference stages: chips/4 servers x latency/batch; retrieval:
+    n_servers x latency/batch, each at max-throughput batch operating point.
+    """
+    shares = {}
+    for stage in schema.xpu_stages_before_decode():
+        p = st.stage_perf(schema, sys, stage, chips_per_stage, batch)
+        shares[stage] = (chips_per_stage / 4) * p.latency / batch \
+            * st.stage_load(schema, stage)
+    r = retrieval_perf(schema, sys.host, sys.n_servers, batch)
+    shares["retrieval"] = sys.n_servers * r.latency / batch \
+        * st.stage_load(schema, "retrieval")
+    dec = cmod.decode_perf(schema.generative, sys.xpu, chips_per_stage,
+                           min(batch * 8, 512), schema.prefix_len,
+                           schema.decode_len)
+    shares["decode"] = (chips_per_stage / 4) * dec.latency \
+        / min(batch * 8, 512)
+    total = sum(shares.values())
+    return {k: v / total for k, v in shares.items()}
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig5_rag_vs_llm():
+    """Fig. 5: RAG with small models vs LLM-only, TTFT x QPS/Chip."""
+    rows = []
+    best = {}
+    for name in ("1B", "8B", "70B", "405B"):
+        plans = opt.enumerate_plans(case_I(name), SYS)
+        b = opt.best_qps_per_chip(plans)
+        l = opt.best_ttft(plans)
+        best[f"RAG-{name}"] = b
+        rows.append(_row(f"fig5/RAG-{name}/max_qps_per_chip",
+                         b.qps_per_chip, f"ttft={b.ttft:.3f}s"))
+        rows.append(_row(f"fig5/RAG-{name}/min_ttft_ms", l.ttft * 1e3))
+    for name in ("8B", "70B", "405B"):
+        plans = opt.enumerate_plans(llm_only(name), SYS)
+        b = opt.best_qps_per_chip(plans)
+        best[f"LLM-{name}"] = b
+        rows.append(_row(f"fig5/LLM-only-{name}/max_qps_per_chip",
+                         b.qps_per_chip, f"ttft={b.ttft:.3f}s"))
+    ratio = best["RAG-8B"].qps_per_chip / best["LLM-70B"].qps_per_chip
+    rows.append(_row("check:fig5/rag8b_vs_llm70b_qps_ratio", ratio,
+                     "paper ~1.5x (RAG-8B outperforms LLM-only-70B)"))
+    # FLOPs ratio (paper: 3.2x reduction)
+    s_rag, s_llm = case_I("8B"), llm_only("70B")
+    fl_rag = 2 * s_rag.generative.params * (s_rag.prefix_len
+                                            + s_rag.decode_len)
+    fl_llm = 2 * s_llm.generative.params * (s_llm.prefix_len
+                                            + s_llm.decode_len)
+    rows.append(_row("check:fig5/inference_flops_reduction",
+                     fl_llm / fl_rag, "paper 3.2x"))
+    # retrieval-bound comparison needs the max-QPS (full platform) plans
+    q1 = max(opt.enumerate_plans(case_I("1B"), SYS), key=lambda p: p.qps)
+    q8 = max(opt.enumerate_plans(case_I("8B"), SYS), key=lambda p: p.qps)
+    rows.append(_row("check:fig5/rag1b_vs_rag8b_max_qps_ratio",
+                     q1.qps / q8.qps,
+                     "paper ~1 (both retrieval-bound at full allocation)"))
+    return rows
+
+
+def fig6_model_size_and_queries():
+    """Fig. 6: QPS/Chip and retrieval share vs queries-per-retrieval."""
+    rows = []
+    for model in ("8B", "70B"):
+        prev = None
+        for q in (1, 2, 4, 8):
+            schema = case_I(model, queries_per_retrieval=q)
+            plans = opt.enumerate_plans(schema, SYS)
+            b = max(plans, key=lambda p: p.qps)
+            shares = _breakdown(schema)
+            rows.append(_row(f"fig6/{model}/q{q}/platform_qps_per_chip",
+                             b.qps_per_platform_chip))
+            rows.append(_row(f"fig6/{model}/q{q}/retrieval_share",
+                             shares["retrieval"]))
+            if prev and model == "8B":
+                rows.append(_row(
+                    f"check:fig6/8B_qps_halves_q{q}",
+                    prev / b.qps_per_platform_chip,
+                    "paper ~2x per query doubling (retrieval-bound)"))
+            prev = b.qps_per_platform_chip
+    return rows
+
+
+def fig7_sensitivities():
+    rows = []
+    # (a) XPU versions
+    for xname, xpu in XPUS.items():
+        sys = SystemConfig(n_servers=32, xpu=xpu)
+        for model in ("1B", "8B", "70B", "405B"):
+            sh = _breakdown(case_I(model), sys)
+            rows.append(_row(f"fig7a/XPU-{xname}/{model}/retrieval_share",
+                             sh["retrieval"]))
+    a = [float(r[1]) for r in rows if "/8B/" in r[0]]
+    rows.append(_row("check:fig7a/share_increases_with_xpu",
+                     int(a[0] <= a[-1]),
+                     "paper: +25% A->C; small models 50-75%"))
+    # (b) scan fraction
+    for frac in (0.0001, 0.001, 0.01):
+        schema = replace(case_I("8B"), scan_fraction=frac)
+        sh = _breakdown(schema)
+        rows.append(_row(f"fig7b/scan_{frac}/retrieval_share",
+                         sh["retrieval"]))
+    # (c) sequence lengths
+    for prefix, decode in ((128, 128), (256, 128), (128, 256), (2048, 512)):
+        schema = replace(case_I("8B"), prefix_len=prefix, decode_len=decode)
+        sh = _breakdown(schema)
+        rows.append(_row(f"fig7c/prefix{prefix}_decode{decode}/"
+                         "retrieval_share", sh["retrieval"],
+                         "paper: 86.3% at short, 30.9% at 2048/512"))
+    return rows
+
+
+def fig8_long_context():
+    rows = []
+    for ctx in (100_000, 1_000_000, 10_000_000):
+        schema = case_II("70B", ctx)
+        plans = opt.enumerate_plans(schema, SYS)
+        b = opt.best_qps_per_chip(plans)
+        sh = _breakdown(schema)
+        rows.append(_row(f"fig8/ctx{ctx}/max_qps_per_chip", b.qps_per_chip))
+        rows.append(_row(f"fig8/ctx{ctx}/encode_share", sh.get("encode", 0)))
+        rows.append(_row(f"fig8/ctx{ctx}/retrieval_share", sh["retrieval"],
+                         "paper: 0.01-0.4%"))
+    # RAG vs long-context LLM (1M tokens, 70B): min-latency points both
+    schema = case_II("70B", 1_000_000)
+    rag_lat = min(p.latency for p in cmod.prefill_points(
+        schema.generative, SYS.xpu, 64, 1, schema.prefix_len))
+    # best-case long-context LLM: local-128 attention everywhere (linear
+    # cost; attention negligible) -- the paper's 2852x corresponds to this
+    # linear-term regime
+    lc_local = cmod.prefill_perf_hybrid_attn(
+        schema.generative, SYS.xpu, 64, 1, 1_000_000,
+        global_frac=128.0 / 1_000_000)
+    rows.append(_row("check:fig8/ttft_speedup_vs_longctx_llm_linear",
+                     lc_local.latency / rag_lat,
+                     "paper 2852.6x (70B, 1M ctx; linear-cost regime)"))
+    # 1/4-global-layers hybrid (quadratic term charged)
+    lc_hybrid = cmod.prefill_perf_hybrid_attn(
+        schema.generative, SYS.xpu, 64, 1, 1_000_000, global_frac=0.25)
+    rows.append(_row("fig8/ttft_speedup_vs_longctx_llm_quarter_global",
+                     lc_hybrid.latency / rag_lat,
+                     "ours, charging the 1/4-global quadratic term"))
+    rows.append(_row("check:fig8/qps_speedup_vs_longctx_llm",
+                     (1.0 / rag_lat) / (1.0 / lc_local.latency),
+                     "paper 6633.9x (their figure adds KV-memory batch "
+                     "effects we exclude)"))
+    return rows
+
+
+def fig9_10_iterative():
+    rows = []
+    schema = case_III("70B", 4)
+    # Fig 9a: TPOT vs decode batch for retrieval frequency 1..8
+    for freq in (1, 2, 4, 8):
+        s = replace(schema, retrieval_frequency=freq)
+        for b_d in (1, 16, 256):
+            r = retrieval_perf(s, SYS.host, 32, min(b_d, 32))
+            tpot = cmod.decode_tpot(s.generative, SYS.xpu, 64, b_d, 640)
+            pre = cmod.prefill_perf(s.generative, SYS.xpu, 64,
+                                    min(b_d, 32), s.prefix_len)
+            per_seq = s.decode_len * tpot + (freq - 1) * (r.latency
+                                                          + pre.latency)
+            rows.append(_row(f"fig9a/freq{freq}/decode_b{b_d}/worst_tpot_ms",
+                             per_seq / s.decode_len * 1e3))
+    # Fig 10b: batching-induced idleness (zero-latency retrieval)
+    anchors = {}
+    for b_d in (16, 64, 256):
+        for b_r in (1, 4, 16, 64):
+            if b_r > b_d:
+                continue
+            r = simulate_iterative_decode(b_d, b_r, 4, n_steps=4096)
+            rows.append(_row(f"fig10/decode{b_d}/retr{b_r}/norm_latency",
+                             r["normalized_decode_latency"]))
+            anchors[(b_d, b_r)] = r["normalized_decode_latency"]
+    rows.append(_row("check:fig10/decode64_retr16", anchors[(64, 16)],
+                     "paper 1.14x"))
+    rows.append(_row("check:fig10/decode64_retr64", anchors[(64, 64)],
+                     "paper 2.77x"))
+    return rows
+
+
+def fig11_rewriter_reranker():
+    rows = []
+    base = case_I("70B")
+    full = case_IV("70B")
+    rw_only = replace(full, reranker=None)
+    rr_only = replace(full, rewriter=None)
+    plans = {"base": opt.enumerate_plans(base, SYS),
+             "rewriter": opt.enumerate_plans(rw_only, SYS),
+             "reranker": opt.enumerate_plans(rr_only, SYS),
+             "both": opt.enumerate_plans(full, SYS)}
+    for k, p in plans.items():
+        b = opt.best_qps_per_chip(p)
+        l = opt.best_ttft(p)
+        rows.append(_row(f"fig11/{k}/max_qps_per_chip", b.qps_per_chip))
+        rows.append(_row(f"fig11/{k}/min_ttft_ms", l.ttft * 1e3))
+    ttft_ratio = (opt.best_ttft(plans["rewriter"]).ttft
+                  / opt.best_ttft(plans["base"]).ttft)
+    rows.append(_row("check:fig11/rewriter_ttft_ratio", ttft_ratio,
+                     "paper 2.4x TTFT increase from rewriter"))
+    qps_ratio = (opt.best_qps_per_chip(plans["both"]).qps_per_chip
+                 / opt.best_qps_per_chip(plans["base"]).qps_per_chip)
+    rows.append(_row("check:fig11/qps_with_both_vs_base", qps_ratio,
+                     "paper: largely unaffected (~1x)"))
+    return rows
+
+
+def fig15_table4_overall():
+    """RAGO vs LLM-extension baseline (C-II, C-IV) + Table 4 schedules."""
+    rows = []
+    for name, schema in (("C-II", case_II("70B", 1_000_000)),
+                         ("C-IV", case_IV("70B"))):
+        rago = opt.enumerate_plans(schema, SYS)
+        base = opt.baseline_plans(schema, SYS)
+        rb, bb = opt.best_qps_per_chip(rago), opt.best_qps_per_chip(base)
+        rows.append(_row(f"fig15/{name}/rago_max_qps_per_chip",
+                         rb.qps_per_chip,
+                         f"chips={rb.total_chips} placement={rb.placement}"))
+        rows.append(_row(f"fig15/{name}/baseline_max_qps_per_chip",
+                         bb.qps_per_chip, f"chips={bb.total_chips}"))
+        rows.append(_row(f"check:fig15/{name}/qps_per_chip_gain",
+                         rb.qps_per_chip / bb.qps_per_chip,
+                         "paper: 1.7x (C-II); up to 2x headline"))
+        # TTFT reduction at matched (within 10%) throughput
+        red = _ttft_reduction_at_matched_qps(rago, base)
+        if red is not None:
+            rows.append(_row(f"check:fig15/{name}/ttft_reduction",
+                             red, "paper headline: up to 55%"))
+        if name == "C-II":
+            for tag, plan in (("max_qps", rb), ("min_ttft",
+                                                opt.best_ttft(rago))):
+                stages = {s["stage"]: (s.get("chips", s.get("servers")),
+                                       s["batch"])
+                          for s in plan.detail["stages"]}
+                rows.append(_row(f"table4/RAGO_{tag}",
+                                 f"ttft={plan.ttft:.2f}s",
+                                 f"qps/chip={plan.qps_per_chip:.2f} "
+                                 f"{stages}"))
+    return rows
+
+
+def _ttft_reduction_at_matched_qps(rago, base):
+    best = None
+    for bp in base:
+        cands = [rp for rp in rago if rp.qps >= 0.95 * bp.qps]
+        if not cands:
+            continue
+        rp = min(cands, key=lambda p: p.ttft)
+        red = 1.0 - rp.ttft / bp.ttft
+        best = max(best, red) if best is not None else red
+    return best
+
+
+def fig17_placement():
+    rows = []
+    for name, schema in (("C-II", case_II("70B", 1_000_000)),
+                         ("C-IV", case_IV("70B"))):
+        pre = schema.xpu_stages_before_decode()
+        from repro.core.optimizer import consecutive_partitions
+        parts = consecutive_partitions(pre)
+        colloc = [[pre]]
+        disagg = [[[s] for s in pre]]
+        hybrid = [p for p in parts if p not in (colloc[0], disagg[0])]
+        results = {}
+        for tag, places in (("collocated", colloc), ("disaggregated",
+                                                     disagg),
+                            ("hybrid", hybrid or disagg)):
+            plans = opt.enumerate_plans(schema, SYS, placements=places)
+            results[tag] = opt.best_qps_per_chip(plans).qps_per_chip
+            rows.append(_row(f"fig17/{name}/{tag}/max_qps_per_chip",
+                             results[tag]))
+        if name == "C-II":
+            rows.append(_row("check:fig17/C-II/placement_insensitive",
+                             results["disaggregated"] / results["collocated"],
+                             "paper: ~1.02x (2% difference)"))
+        else:
+            rows.append(_row("check:fig17/C-IV/hybrid_vs_collocated",
+                             max(results["hybrid"],
+                                 results["disaggregated"])
+                             / results["collocated"],
+                             "paper: up to 1.5x"))
+    return rows
+
+
+def fig18_allocation():
+    """Allocation sensitivity: spread of max QPS/chip across allocations."""
+    rows = []
+    schema = case_II("70B", 1_000_000)
+    pre = schema.xpu_stages_before_decode()
+    for tag, placement in (("collocated", [pre]),
+                           ("disaggregated", [[s] for s in pre])):
+        sweep = opt.allocation_sweep(schema, SYS, placement)
+        if not sweep:
+            continue
+        vals = list(sweep.values())
+        rows.append(_row(f"fig18/{tag}/qps_per_chip_spread",
+                         max(vals) / min(vals),
+                         "paper: 52.5x collocated / 64.1x disagg"))
+        rows.append(_row(f"fig18/{tag}/n_allocations", len(vals)))
+    return rows
+
+
+def fig19_microbatch():
+    """TTFT reduction from micro-batching a burst (Fig. 14 execution).
+
+    x-axis = burst size B; reduction = 1 - min_m TTFT_pipelined(m) /
+    TTFT_monolithic(B), where pipelined TTFT of the first micro-batch is
+    the sum of per-stage latencies at micro-batch size m."""
+    rows = []
+    cases = (("C-I", case_I("8B", queries_per_retrieval=8)),
+             ("C-II", case_II("70B", 1_000_000)),
+             ("C-IV", case_IV("70B")))
+    for name, schema in cases:
+        stages_list = schema.xpu_stages_before_decode()
+
+        def ttft(m):
+            t = 0.0
+            for s in stages_list:
+                t += st.stage_perf(schema, SYS, s, 32, m).latency
+            t += retrieval_perf(schema, SYS.host, 32, m).latency
+            return t
+
+        for burst in (2, 8, 16, 32):
+            t_full = ttft(burst)
+            best = min(ttft(m) for m in (1, 2, 4, 8, 16, 32) if m <= burst)
+            red = 1.0 - best / t_full
+            rows.append(_row(f"fig19/{name}/burst{burst}/ttft_reduction",
+                             red,
+                             "paper: C-II 22%@2->55%@32; C-I 46%@32 "
+                             "(ineffective at small bursts); C-IV ~25%@32"))
+    return rows
+
+
+ALL = [fig5_rag_vs_llm, fig6_model_size_and_queries, fig7_sensitivities,
+       fig8_long_context, fig9_10_iterative, fig11_rewriter_reranker,
+       fig15_table4_overall, fig17_placement, fig18_allocation,
+       fig19_microbatch]

@@ -1,0 +1,116 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede any jax import -- same contract as launch/dryrun.py)
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Lowers each hypothesis-driven variant of the three chosen cells on the
+single-pod mesh, extracts the roofline terms, and appends the record to
+``perf_results/``.  Run:  PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.configs.base import get_arch
+from repro.distributed.sharding import to_named
+from repro.launch.dryrun import collective_stats, memory_stats
+from repro.launch.mesh import make_production_mesh
+
+OUT = Path(__file__).resolve().parent.parent / "perf_results"
+
+
+def measure(prog, mesh) -> dict:
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(prog.fn, in_shardings=to_named(prog.in_specs, mesh),
+                         out_shardings=to_named(prog.out_specs, mesh),
+                         donate_argnums=prog.donate)
+        compiled = jitted.lower(*prog.abstract_inputs).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    rec = {
+        "name": prog.name,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total_bytes"],
+        "collectives": {k: v for k, v in coll.items() if k != "total_bytes"},
+        "memory": memory_stats(compiled),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    rec["compute_s"] = rec["flops"] / PEAK_FLOPS
+    rec["memory_s"] = rec["bytes_accessed"] / HBM_BW
+    rec["collective_s"] = rec["collective_bytes"] / LINK_BW
+    rec["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: rec[k])
+    return rec
+
+
+def run(tag: str, build) -> dict | None:
+    mesh = make_production_mesh(multi_pod=False)
+    try:
+        rec = measure(build(mesh), mesh)
+    except Exception as e:
+        rec = {"name": tag, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-1500:]}
+    OUT.mkdir(exist_ok=True)
+    (OUT / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    if "error" in rec:
+        print(f"[perf] {tag}: FAILED {rec['error']}")
+    else:
+        print(f"[perf] {tag}: comp={rec['compute_s']:.3e}s "
+              f"mem={rec['memory_s']:.3e}s coll={rec['collective_s']:.3e}s "
+              f"dom={rec['dominant']} "
+              f"hbm={rec['memory'].get('per_device_bytes', 0)/2**30:.1f}GiB",
+              flush=True)
+    return rec
+
+
+def main():
+    from repro.launch.steps import build_cell
+    from repro.perf import variants as V
+
+    # Cell A: llama4-scout decode_32k (paper-representative serving decode)
+    arch = get_arch("llama4-scout-17b-a16e")
+    shape = arch.shape("decode_32k")
+    run("llama4_decode__v0_baseline",
+        lambda m: build_cell(arch, shape, m))
+    run("llama4_decode__v1_splitk",
+        lambda m: V.build_lm_decode_variant(arch, shape, m, splitk=True,
+                                            int8_kv=False))
+    run("llama4_decode__v2_splitk_int8kv",
+        lambda m: V.build_lm_decode_variant(arch, shape, m, splitk=True,
+                                            int8_kv=True))
+
+    # Cell B: moonshot MoE train_4k (worst train memory, collective-bound)
+    arch_b = get_arch("moonshot-v1-16b-a3b")
+    shape_b = arch_b.shape("train_4k")
+    run("moonshot_train__v0_baseline",
+        lambda m: build_cell(arch_b, shape_b, m))
+    run("moonshot_train__v1_mb2",
+        lambda m: V.build_lm_train_variant(arch_b, shape_b, m,
+                                           microbatches=2))
+    run("moonshot_train__v2_megatron_ffn",
+        lambda m: V.build_lm_train_variant(arch_b, shape_b, m,
+                                           moe_megatron=True))
+    run("moonshot_train__v3_mb2_megatron",
+        lambda m: V.build_lm_train_variant(arch_b, shape_b, m,
+                                           microbatches=2,
+                                           moe_megatron=True))
+
+    # Cell C: pna ogb_products (most collective-bound)
+    arch_c = get_arch("pna")
+    shape_c = arch_c.shape("ogb_products")
+    run("pna_ogb__v0_baseline",
+        lambda m: build_cell(arch_c, shape_c, m))
+    run("pna_ogb__v1_dst_partitioned",
+        lambda m: V.build_gnn_partitioned_variant(arch_c, shape_c, m))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell: three per-chip roofline terms derived from
+the compiled artifact (XPU-A constants per the brief), dominant bottleneck,
+MODEL_FLOPS usefulness ratio, and a one-line lever.
+
+CPU-backend caveat: XLA-CPU float-normalization widens bf16 temporaries to
+f32, so ``bytes_accessed`` and memory sizes are conservative upper bounds
+(<= 2x) for bf16-heavy programs; FLOP counts are unaffected.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+# Hardware constants from the brief (XPU-A ~ TPU v5e)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "dryrun_results"
+
+
+def model_flops(arch: str, shape: str, step: str) -> float | None:
+    """Analytic useful FLOPs for the whole step (all chips)."""
+    from repro.configs.base import get_arch
+    spec = get_arch(arch)
+    if spec.family == "lm":
+        cfg = spec.config
+        n = cfg.param_count()
+        n_act = cfg.active_param_count()
+        dims = spec.shape(shape).dims
+        d = dims["seq_len"] * dims["global_batch"]
+        if step == "train":
+            return 6.0 * n_act * d
+        if step == "prefill":
+            return 2.0 * n_act * d
+        if step == "decode":
+            # one token per sequence
+            return 2.0 * n_act * spec.shape(shape).dims["global_batch"]
+    return None
+
+
+def load_cells(results_dir: Path = RESULTS_DIR) -> list[dict]:
+    cells = []
+    for f in sorted(results_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            cells.append(rec)
+    return cells
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Per-chip three-term roofline for one cell.
+
+    XLA-CPU ``cost_analysis`` counts while-loop bodies once (layer scans!),
+    so HLO FLOPs are a per-iteration lower bound; where an analytic model
+    FLOP count exists the compute term uses
+    max(HLO, analytic/device) -- recorded as ``compute_src``.  Collective
+    bytes ARE trip-weighted (see dryrun.collective_stats)."""
+    mf = model_flops(rec["arch"], rec["shape"], rec["step"])
+    flops_dev = rec["flops"]
+    compute_src = "hlo"
+    if mf:
+        analytic_dev = mf / rec["n_devices"]
+        if rec["step"] == "train":
+            analytic_dev *= 4.0 / 3.0   # full-remat recompute of the fwd
+        if analytic_dev > flops_dev:
+            flops_dev = analytic_dev
+            compute_src = "analytic"
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = rec["bytes_accessed"] / HBM_BW
+    coll_t = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dom = max(terms, key=terms.get)
+    useful = None
+    if mf:
+        useful = mf / max(flops_dev * rec["n_devices"], 1.0)
+    bound = max(compute_t, memory_t, coll_t)
+    fraction = compute_t / bound if bound > 0 else 0.0
+    return {**terms, "dominant": dom, "model_flops": mf,
+            "compute_src": compute_src,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": fraction,
+            "mem_gib": rec["memory"].get("per_device_bytes", 0) / 2 ** 30}
+
+
+LEVERS = {
+    "compute_s": "raise MFU: larger per-chip tiles / fuse small ops",
+    "memory_s": "cut HBM traffic: bf16/int8 residency, fuse, remat policy",
+    "collective_s": "reshard: overlap collectives, reduce-scatter instead "
+                    "of all-gather, EP-local dispatch",
+}
+
+
+def table(results_dir: Path = RESULTS_DIR) -> list[tuple]:
+    rows = []
+    for rec in load_cells(results_dir):
+        t = roofline_terms(rec)
+        name = f"{rec['arch']}:{rec['shape']}:{rec['mesh']}"
+        rows.append((name, rec["step"], t["compute_s"], t["memory_s"],
+                     t["collective_s"], t["dominant"],
+                     t["roofline_fraction"], t["useful_flops_ratio"],
+                     t["mem_gib"], LEVERS[t["dominant"]]))
+    return rows
+
+
+def csv_rows() -> list[tuple]:
+    out = [("roofline/header",
+            "cell,step,compute_s,memory_s,collective_s,dominant,"
+            "roofline_fraction,useful_ratio,mem_gib", "")]
+    for r in table():
+        out.append((f"roofline/{r[0]}",
+                    f"{r[2]:.3e}|{r[3]:.3e}|{r[4]:.3e}|{r[5]}|{r[6]:.3f}"
+                    f"|{'' if r[7] is None else round(r[7], 3)}|{r[8]:.2f}",
+                    r[9]))
+    return out

@@ -1,0 +1,53 @@
+# One function per paper table/figure + roofline + system micro-benches.
+# Prints ``name,value,note`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="substring filter on benchmark fn names")
+    p.add_argument("--skip-roofline", action="store_true")
+    p.add_argument("--skip-system", action="store_true")
+    args = p.parse_args(argv)
+
+    from benchmarks import paper_figs, system_bench
+
+    fns = list(paper_figs.ALL)
+    if not args.skip_system:
+        fns += list(system_bench.ALL)
+
+    print("name,value,note")
+    failures = 0
+    for fn in fns:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            for name, value, note in fn():
+                print(f"{name},{value},{note}")
+        except Exception as e:
+            failures += 1
+            print(f"ERROR/{fn.__name__},{type(e).__name__}: {e},")
+            traceback.print_exc(file=sys.stderr)
+        print(f"timing/{fn.__name__}_s,{time.time()-t0:.1f},", flush=True)
+
+    if not args.skip_roofline:
+        try:
+            from benchmarks import roofline
+            for name, value, note in roofline.csv_rows():
+                print(f"{name},{value},{note}")
+        except Exception as e:
+            failures += 1
+            print(f"ERROR/roofline,{type(e).__name__}: {e},")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Micro-benchmarks for the executable system (kernels, retrieval, serving).
+
+Reports wall-clock us/call on this host (CPU container; TPU numbers come
+from the analytical roofline, not timed here).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_bench():
+    rows = []
+    from repro.kernels.pq_scan.ops import pq_scan
+    from repro.kernels.pq_scan.ref import pq_scan_ref
+    lut = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 256))
+    codes = jax.random.randint(jax.random.PRNGKey(1), (4, 4096, 8), 0,
+                               256).astype(jnp.uint8)
+    rows.append(("bench/pq_scan_kernel_us", f"{_time(pq_scan, lut, codes):.1f}",
+                 "interpret-mode on CPU"))
+    ref = jax.jit(pq_scan_ref)
+    rows.append(("bench/pq_scan_ref_us", f"{_time(ref, lut, codes):.1f}",
+                 "jnp oracle"))
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 4, 64),
+                          jnp.float32)
+    rows.append(("bench/flash_attention_us",
+                 f"{_time(flash_attention, q, q, q):.1f}", "S=256 H=4 D=64"))
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    q1 = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 64))
+    kc = jax.random.normal(jax.random.PRNGKey(4), (4, 1024, 8, 64))
+    cl = jnp.full((4,), 1024, jnp.int32)
+    rows.append(("bench/decode_attention_us",
+                 f"{_time(decode_attention, q1, kc, kc, cl):.1f}",
+                 "B=4 S=1024"))
+    return rows
+
+
+def retrieval_bench():
+    rows = []
+    from repro.retrieval.ivf_pq import build_index, recall_at_k, search
+    key = jax.random.PRNGKey(0)
+    # clustered corpus (PQ-friendly)
+    centers = jax.random.normal(key, (64, 64)) * 3
+    assign = jax.random.randint(jax.random.PRNGKey(1), (8192,), 0, 64)
+    vecs = centers[assign] + jax.random.normal(jax.random.PRNGKey(2),
+                                               (8192, 64)) * 0.3
+    qs = vecs[:64]
+    t0 = time.perf_counter()
+    idx = build_index(jax.random.PRNGKey(3), vecs, n_lists=64, n_subq=8)
+    rows.append(("bench/ivfpq_build_s", f"{time.perf_counter()-t0:.2f}",
+                 "8192 x 64d, 64 lists"))
+    for nprobe in (4, 16):
+        t = _time(lambda: search(idx, qs, nprobe=nprobe, k=10), iters=3)
+        r = recall_at_k(idx, vecs, qs, k=10, nprobe=nprobe)
+        rows.append((f"bench/ivfpq_search_nprobe{nprobe}_us", f"{t:.0f}",
+                     f"recall@10={r:.3f} batch=64"))
+    return rows
+
+
+def serving_bench():
+    rows = []
+    from repro.models import transformer as tr
+    from repro.serving.engine import Component, EngineConfig, RAGEngine
+    from repro.serving.request import Request
+    gen_cfg = tr.TransformerConfig(name="bench-gen", n_layers=2, d_model=64,
+                                   n_heads=4, n_kv_heads=2, d_head=16,
+                                   d_ff=128, vocab_size=128)
+    enc_cfg = tr.TransformerConfig(name="bench-enc", n_layers=2, d_model=32,
+                                   n_heads=2, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab_size=128, causal=False)
+    gen = Component(gen_cfg, tr.init_params(jax.random.PRNGKey(0), gen_cfg))
+    enc = Component(enc_cfg, tr.init_params(jax.random.PRNGKey(1), enc_cfg))
+    corpus = np.random.default_rng(0).integers(0, 128, (64, 12)).astype(
+        np.int32)
+    engine = RAGEngine(gen, enc, corpus,
+                       EngineConfig(decode_slots=4, s_max=128,
+                                    max_new_tokens=8))
+    rng = np.random.default_rng(1)
+    reqs = [Request(question=rng.integers(0, 128, (6,)).astype(np.int32))
+            for _ in range(8)]
+    t0 = time.perf_counter()
+    out = engine.serve(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in out)
+    rows.append(("bench/engine_tokens_per_s", f"{toks/dt:.1f}",
+                 f"8 reqs, 4 slots, {engine.metrics}"))
+    return rows
+
+
+ALL = [kernel_bench, retrieval_bench, serving_bench]

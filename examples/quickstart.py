@@ -1,0 +1,38 @@
+"""Quickstart: describe a RAG workload with RAGSchema and let RAGO find the
+serving schedule Pareto (paper Fig. 2 workflow).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import optimizer as opt
+from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.ragschema import RAGSchema, LLAMA3_8B, ENCODER_120M
+
+
+def main():
+    # A custom RAG workload: 8B generative LLM + reranker over the
+    # hyperscale 64B-vector database (paper defaults otherwise).
+    schema = RAGSchema(generative=LLAMA3_8B, reranker=ENCODER_120M)
+    system = SystemConfig(n_servers=32, xpu=XPU_C)   # 128 XPUs + retrieval
+
+    print("pipeline stages:", schema.stages())
+    plans = opt.enumerate_plans(schema, system)
+    print(f"\nTTFT vs QPS/chip Pareto ({len(plans)} schedules):")
+    print(f"{'TTFT(ms)':>10} {'QPS':>9} {'QPS/chip':>9} {'chips':>6}  "
+          f"placement / batches")
+    for p in plans:
+        stages = {s['stage']: s['batch'] for s in p.detail['stages']}
+        print(f"{p.ttft*1e3:10.1f} {p.qps:9.1f} {p.qps_per_chip:9.3f} "
+              f"{p.total_chips:6d}  {p.placement} {stages}")
+
+    best = opt.best_qps_per_chip(plans)
+    print(f"\nRAGO pick (max QPS/chip meeting capacity): "
+          f"{best.qps_per_chip:.3f} QPS/chip @ TTFT {best.ttft*1e3:.1f} ms")
+    print("allocation:", dict(zip([g for g in best.placement],
+                                  best.detail['group_chips'])),
+          "+ decode:", best.detail['decode_chips'], "XPUs,",
+          best.detail['n_servers'], "retrieval servers")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end RAG serving driver: small LM + encoder + IVF-PQ retrieval over
+a topical synthetic corpus, batched requests through the continuous-batching
+engine (the executable counterpart of the paper's pipeline).
+
+Run:  PYTHONPATH=src python examples/serve_rag.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import topical_corpus
+from repro.models import transformer as tr
+from repro.serving.engine import Component, EngineConfig, RAGEngine
+from repro.serving.request import Request
+
+VOCAB = 256
+
+
+def component(seed, causal=True, d=64, layers=2):
+    cfg = tr.TransformerConfig(name=f"m{seed}", n_layers=layers, d_model=d,
+                               n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                               vocab_size=VOCAB, causal=causal)
+    return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+
+def main():
+    corpus, topics, make_q = topical_corpus(128, 12, VOCAB, n_topics=8)
+    engine = RAGEngine(
+        generative=component(0),
+        encoder=component(1, causal=False, d=32),
+        corpus_tokens=corpus,
+        cfg=EngineConfig(decode_slots=4, s_max=128, retrieval_k=2,
+                         max_new_tokens=12))
+
+    rng = np.random.default_rng(0)
+    requests = [Request(question=make_q(int(rng.integers(0, 8))))
+                for _ in range(12)]
+    t0 = time.time()
+    done = engine.serve(requests)
+    dt = time.time() - t0
+
+    hits = total = 0
+    for r in done:
+        ids = r.retrieved_ids[0]
+        topic = int(np.argmax(np.bincount(
+            [topics[d] for d in ids], minlength=8)))
+        print(f"req {r.rid}: retrieved docs {ids} (topics "
+              f"{[int(topics[d]) for d in ids]}), "
+              f"generated {len(r.output)} tokens, ttft {r.ttft*1e3:.0f} ms")
+    toks = sum(len(r.output) for r in done)
+    m = engine.metrics
+    print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+    print(f"engine metrics: {m}")
+    util = 1 - m['idle_slot_steps'] / (m['decode_steps']
+                                       * engine.pool.n_slots)
+    print(f"decode slot utilization: {util:.0%} (continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_IDS, ArchSpec, ShapeSpec, all_cells, get_arch
+
+__all__ = ["ARCH_IDS", "ArchSpec", "ShapeSpec", "all_cells", "get_arch"]

@@ -1,0 +1,116 @@
+"""Per-stage performance profiling (Algorithm 1, Step 1).
+
+Maps RAGSchema stage names to (latency, throughput) under a given XPU count
+and batch size, using the operator-level cost model.  ``stage_frontier``
+returns the per-stage Pareto over batch sizes -- the exact pruning that lets
+the exhaustive schedule search stay tractable.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.core import cost_model as cmod
+from repro.core.hardware import SystemConfig
+from repro.core.pareto import pareto
+from repro.core.ragschema import RAGSchema
+from repro.core.retrieval_model import retrieval_perf
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+DECODE_BATCHES = BATCHES + (1024,)
+
+
+def stage_load(schema: RAGSchema, stage: str) -> float:
+    """Passes through this stage per served request."""
+    if stage == "retrieval":
+        return float(schema.retrieval_frequency)
+    if stage == "prefill":
+        return 1.0 + (schema.retrieval_frequency - 1)
+    return 1.0
+
+
+def stage_points(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
+                 batch: int, tp_only: bool = False) -> list[cmod.StagePerf]:
+    """All (latency, throughput) operating points of one stage on ``n``
+    chips (or ``n`` servers for retrieval) at one batch size -- one point
+    per (tp, pp) factorization (tp==n only for collocated stages)."""
+    xpu = sys.xpu
+    if stage == "encode":
+        return list(cmod.encoder_points(schema.encoder, xpu, n, batch,
+                                        schema.encode_context_len,
+                                        schema.chunk_size, tp_only=tp_only))
+    if stage == "rewrite":
+        tpot = cmod.decode_tpot(schema.rewriter, xpu, n, batch,
+                                schema.question_len)
+        out = []
+        for p in cmod.prefill_points(schema.rewriter, xpu, n, batch,
+                                     schema.question_len, tp_only=tp_only):
+            lat = p.latency + schema.rewriter_out_len * tpot
+            out.append(cmod.StagePerf(lat, batch / lat))
+        return out
+    if stage == "rerank":
+        tokens = schema.rerank_candidates * schema.rerank_doc_tokens
+        return list(cmod.encoder_points(schema.reranker, xpu, n, batch,
+                                        tokens, schema.rerank_doc_tokens,
+                                        tp_only=tp_only))
+    if stage == "prefill":
+        return list(cmod.prefill_points(schema.generative, xpu, n, batch,
+                                        schema.prefix_len,
+                                        tp_only=tp_only))
+    if stage == "retrieval":
+        perf = retrieval_perf(schema, sys.host, n, batch)
+        return [cmod.StagePerf(perf.latency, perf.throughput)]
+    raise ValueError(stage)
+
+
+def stage_perf(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
+               batch: int) -> cmod.StagePerf:
+    """Throughput-optimal single point (characterization plots)."""
+    pts = stage_points(schema, sys, stage, n, batch)
+    return max(pts, key=lambda p: p.throughput)
+
+
+def stage_weights_bytes(schema: RAGSchema, stage: str) -> float:
+    model = {"encode": schema.encoder, "rewrite": schema.rewriter,
+             "rerank": schema.reranker, "prefill": schema.generative,
+             "decode": schema.generative}.get(stage)
+    return model.params * cmod.BYTES_W if model is not None else 0.0
+
+
+def stage_frontier(schema: RAGSchema, sys: SystemConfig, stage: str,
+                   n: int, tp_only: bool = False) -> list[tuple]:
+    """Pareto (latency, throughput/load, {stage meta}) over batch sizes AND
+    (tp, pp) factorizations."""
+    load = stage_load(schema, stage)
+    pts = []
+    for b in BATCHES:
+        for p in stage_points(schema, sys, stage, n, b, tp_only=tp_only):
+            pts.append((p.latency, p.throughput / load,
+                        {"stage": stage, "batch": b, "chips": n}))
+    return pareto(pts)
+
+
+def decode_frontier(schema: RAGSchema, sys: SystemConfig, n: int,
+                    iterative_overhead=None) -> list[tuple]:
+    """(TPOT latency, request throughput, meta) over decode batch sizes.
+
+    ``iterative_overhead(b_d) -> extra seconds per sequence`` models §5.3
+    decode stalls (retrieval + iteration prefill + batching wait).
+    """
+    xpu = sys.xpu
+    g = schema.generative
+    pts = []
+    for b in DECODE_BATCHES:
+        if not cmod.decode_memory_ok(g, xpu, n, b,
+                                     schema.prefix_len + schema.decode_len):
+            continue
+        tpot = cmod.decode_tpot(g, xpu, n, b,
+                                schema.prefix_len + schema.decode_len // 2)
+        seq_time = schema.decode_len * tpot
+        if iterative_overhead is not None:
+            seq_time = seq_time + iterative_overhead(b)
+        tput = b / seq_time
+        worst_tpot = seq_time / schema.decode_len
+        pts.append((worst_tpot, tput, {"stage": "decode", "batch": b,
+                                       "chips": n}))
+    return pareto(pts)

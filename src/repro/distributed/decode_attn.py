@@ -1,0 +1,110 @@
+"""Distributed split-K decode attention (shard_map over the ``model`` axis).
+
+The KV cache is sequence-sharded across ``model`` (flash-decoding across
+chips, cf. "Efficiently Scaling Transformer Inference"): each shard computes
+attention of the full query head set against its local KV chunk, then the
+partial (out, logsumexp) pairs are combined with a numerically stable
+psum-renormalization.  This replaces the XLA-default pattern (all-gather the
+whole cache to every chip, or all-reduce inside softmax twice) with exactly
+one max- and one sum-reduction over the tiny (B, H) statistics plus one psum
+of the (B, H, D) partial outputs -- collective bytes independent of S.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.launch.mesh import dp_axes
+from repro.models.common import repeat_kv
+
+
+def _local_decode_attn(q, kc, vc, cache_len, shard_offset, q_per_kv):
+    """Partial attention over a local KV chunk.
+
+    q: (B, 1, H, D); kc/vc: (B, S_loc, H_kv, D).
+    Returns (partial_out (B,H,D) fp32, m (B,H), l (B,H)).
+    """
+    b, s_loc, _, d = kc.shape
+    kr = repeat_kv(kc, q_per_kv)
+    vr = repeat_kv(vc, q_per_kv)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    pos = shard_offset + jnp.arange(s_loc)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)[:, :, 0]                       # (B, H)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores[:, :, 0, :] - m_safe[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)                                     # (B, H)
+    out = jnp.einsum("bhk,bkhd->bhd", p.astype(vr.dtype), vr)
+    return out.astype(jnp.float32), m, l
+
+
+def make_distributed_decode_attn(mesh: Mesh, q_per_kv: int,
+                                 seq_axis: str = "model",
+                                 quantized: bool = False):
+    """Returns attn_impl(q, k_cache, v_cache, [k_scale, v_scale,]
+    cache_len) -> (B, 1, H, D).
+
+    Cache layout: (B, S, H_kv, D) with S sharded over ``seq_axis`` and B over
+    the data axes; q replicated over ``seq_axis``.  With ``quantized`` the
+    caches are int8 with per-(B, S, H_kv) scales, dequantized inside the
+    shard so HBM reads stay 1 byte/element.
+    """
+    dp = dp_axes(mesh)
+
+    def combine(q, kc, vc, cache_len):
+        idx = jax.lax.axis_index(seq_axis)
+        s_loc = kc.shape[1]
+        out, m, l = _local_decode_attn(q, kc, vc, cache_len, idx * s_loc,
+                                       q_per_kv)
+        m_g = jax.lax.pmax(m, seq_axis)                          # (B, H)
+        m_g_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g_safe), 0.0)
+        l_g = jax.lax.psum(l * corr, seq_axis)
+        out_g = jax.lax.psum(out * corr[..., None], seq_axis)
+        out_g = out_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out_g[:, None]                                    # (B, 1, H, D)
+
+    if not quantized:
+        def body(q, kc, vc, cache_len):
+            return combine(q, kc, vc, cache_len).astype(vc.dtype)
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, None, None),          # q
+                      P(dp, seq_axis, None, None),      # k cache
+                      P(dp, seq_axis, None, None),      # v cache
+                      P(dp)),                           # cache_len
+            out_specs=P(dp, None, None, None),
+            check_vma=False)
+
+    def body_q(q, kc, vc, ks, vs, cache_len):
+        k = kc.astype(q.dtype) * ks[..., None].astype(q.dtype)
+        v = vc.astype(q.dtype) * vs[..., None].astype(q.dtype)
+        return combine(q, k, v, cache_len).astype(q.dtype)
+
+    return shard_map(
+        body_q, mesh=mesh,
+        in_specs=(P(dp, None, None, None),
+                  P(dp, seq_axis, None, None),
+                  P(dp, seq_axis, None, None),
+                  P(dp, seq_axis, None),               # k scale
+                  P(dp, seq_axis, None),               # v scale
+                  P(dp)),
+        out_specs=P(dp, None, None, None),
+        check_vma=False)
+
+
+def reference_decode_attn(q, kc, vc, cache_len, q_per_kv: int):
+    """Single-device oracle with identical semantics."""
+    out, m, l = _local_decode_attn(q, kc, vc, cache_len, 0, q_per_kv)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, None].astype(vc.dtype)

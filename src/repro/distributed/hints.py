@@ -1,0 +1,45 @@
+"""Trace-time sharding hints.
+
+Model code is mesh-agnostic; step builders know the mesh.  Builders install
+named PartitionSpecs via ``sharding_hints(...)`` around the traced body and
+model code applies them with ``constrain(x, name)`` -- a no-op when the hint
+is absent (single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_LOCAL = threading.local()
+
+
+def _stack() -> list[dict]:
+    if not hasattr(_LOCAL, "stack"):
+        _LOCAL.stack = [{}]
+    return _LOCAL.stack
+
+
+@contextlib.contextmanager
+def sharding_hints(**specs):
+    stack = _stack()
+    merged = dict(stack[-1])
+    merged.update(specs)
+    stack.append(merged)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def hint(name: str):
+    return _stack()[-1].get(name)
+
+
+def constrain(x, name: str):
+    spec = hint(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

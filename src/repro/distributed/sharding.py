@@ -1,0 +1,188 @@
+"""Sharding rules: PartitionSpec trees per architecture family and step kind.
+
+Policies (see DESIGN.md §5):
+
+* **LM train**  -- FSDP over the data axes (``("pod","data")`` multi-pod) x
+  tensor parallel over ``model``; MoE experts sharded over ``model`` (EP);
+  AdamW moments sharded identically to params (ZeRO-3-equivalent since params
+  are already fully sharded).
+* **LM serve**  -- TP over ``model`` only (weights replicated across data so
+  any data shard can serve any request); int8 weights per the paper; KV cache
+  batch->data, sequence->``model`` (split-K decode attention).
+* **GNN**       -- edges sharded over every device, node features replicated;
+  ``segment_sum`` partials are combined by XLA all-reduce.
+* **Recsys**    -- embedding tables row-sharded over every device
+  (model-parallel embeddings); batch sharded over every device for the dense
+  side (DLRM hybrid parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import all_axes, dp_axes
+
+
+def _spec_tree_from_rules(tree: Any, rule_fn) -> Any:
+    """Map (path, leaf) -> PartitionSpec over a pytree."""
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return rule_fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def _dims(leaf) -> int:
+    return len(leaf.shape)
+
+
+def divisible_axes(n: int, axes: tuple[str, ...], mesh: Mesh):
+    """Longest prefix of ``axes`` whose total size divides ``n``.
+
+    Falls back toward replication so any global dim (odd vocab, 10^6
+    candidates, batch=1) shards as much as it evenly can.
+    """
+    import math
+    for k in range(len(axes), 0, -1):
+        sub = axes[:k]
+        size = math.prod(mesh.shape[a] for a in sub)
+        if n % size == 0:
+            return sub
+    return None
+
+
+# ---------------------------------------------------------------------------
+# LM params
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(params: Any, mesh: Mesh, *, train: bool,
+                   moe_megatron: bool = False) -> Any:
+    """PartitionSpec tree matching ``transformer.init_params`` layout.
+
+    Quantized leaves ({"q", "scale"}) inherit the q spec; scales replicate.
+    ``moe_megatron`` shards expert FFN weights Megatron-style (column/
+    row-parallel over the non-contraction dims) instead of FSDP over the
+    contraction dim, trading weight all-gathers for activation
+    reduce-scatters (perf iteration, see EXPERIMENTS.md S Perf).
+    """
+    dp = dp_axes(mesh) if train else None  # FSDP only in training
+
+    def rule(name: str, leaf) -> P:
+        nd = _dims(leaf)
+        is_scale = name.endswith("/scale")
+        if is_scale:
+            return P()
+        if "embed" in name:                      # (V, d)
+            return P(dp, "model")
+        if "head" in name:                       # (d, V)
+            return P(dp, "model")
+        if "ln" in name:                         # (d,) or (L, d)
+            return P()
+        if "router" in name:                     # (L, d, E)
+            return P(None, dp, None)
+        if "w_gate" in name or "w_up" in name:
+            if nd == 4:                          # MoE (L, E, d, f)
+                if moe_megatron:                 # column-parallel on f
+                    return P(None, "model", None, dp)
+                return P(None, "model", dp, None)
+            return P(None, dp, "model")          # dense (L, d, f)
+        if "w_down" in name:
+            if nd == 4:                          # MoE (L, E, f, d)
+                # row-parallel on f (megatron) == FSDP layout here; the
+                # difference is on w_gate/w_up above
+                return P(None, "model", dp, None)
+            return P(None, "model", dp)          # dense (L, f, d)
+        if "wq" in name or "wk" in name or "wv" in name:
+            return P(None, dp, "model")          # (L, d, H*Dh)
+        if "wo" in name:
+            return P(None, "model", dp)          # (L, H*Dh, d)
+        return P()
+
+    return _spec_tree_from_rules(params, rule)
+
+
+def lm_cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV cache (L, B, S, H_kv, D): batch -> data axes, sequence -> model."""
+    def spec(leaf):
+        dp = divisible_axes(leaf.shape[1], dp_axes(mesh), mesh)
+        return P(None, dp, "model", None, None)
+    return jax.tree_util.tree_map(spec, cache)
+
+
+def lm_batch_specs(mesh: Mesh, batch: int) -> P:
+    return P(divisible_axes(batch, dp_axes(mesh), mesh), None)
+
+
+def lm_decode_io_specs(mesh: Mesh, batch: int) -> dict:
+    dp = divisible_axes(batch, dp_axes(mesh), mesh)
+    return {
+        "token": P(dp),
+        "pos": P(dp),
+        "logits": P(dp, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_specs(mesh: Mesh) -> dict:
+    ax = all_axes(mesh)
+    return {
+        "params": P(),                            # replicated (tiny)
+        "x": P(),                                 # node features replicated
+        "edges": P(None, ax),                     # (2, E) edges sharded
+        "edge_mask": P(ax),
+        "labels": P(),
+        "label_mask": P(),
+        "graph_ids": P(),
+        "out": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+
+def recsys_specs(mesh: Mesh) -> dict:
+    ax = all_axes(mesh)
+
+    def param_rule(name: str, leaf) -> P:
+        last = name.split("/")[-1]
+        if "table" in last or last in ("tables", "linear"):
+            if _dims(leaf) == 2:                  # (rows, dim) row-sharded
+                return P(ax, None)
+        return P()                                # MLPs and misc replicated
+
+    return {
+        "param_rule": param_rule,
+        "batch": P(ax),                           # leading batch dim sharded
+        "candidates": P(ax),
+        "out": P(ax),
+    }
+
+
+def recsys_param_specs(params: Any, mesh: Mesh) -> Any:
+    rule = recsys_specs(mesh)["param_rule"]
+    return _spec_tree_from_rules(params, rule)
+
+
+def recsys_batch_specs(batch: Any, mesh: Mesh) -> Any:
+    ax = all_axes(mesh)
+    return jax.tree_util.tree_map(
+        lambda leaf: P(ax, *([None] * (_dims(leaf) - 1))), batch)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

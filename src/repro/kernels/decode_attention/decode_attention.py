@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: flash-decoding (split-K) attention for serving.
+
+One query token per sequence attends to a long KV cache.  The grid is
+(batch, kv_blocks); the kv dimension is the innermost (sequential on TPU)
+axis, so the kernel carries running (max, sum, accumulator) statistics in
+VMEM scratch across kv blocks and finalizes the output on the last block --
+the KV cache streams through VMEM one (block_k, H, D) tile at a time while
+the (H, D) accumulator stays resident.
+
+``cache_len`` masks unwritten cache slots (continuous batching: each
+sequence has its own valid length).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_k: int, sm_scale: float):
+    s_idx = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (H, D)
+    k = k_ref[0].astype(jnp.float32)                     # (block_k, H, D)
+    v = v_ref[0].astype(jnp.float32)
+    cache_len = len_ref[0]
+
+    s = jnp.einsum("hd,khd->hk", q, k)                   # (H, block_k)
+    pos = s_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(pos < cache_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.einsum("hk,khd->hd",
+                                                             p, v)
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(
+                        o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, cache_len: jax.Array,
+                            block_k: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, H, D); cache_len: (B,) int32.
+
+    Returns (B, H, D).  S % block_k == 0 (ops.py pads)."""
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    assert s % block_k == 0
+    grid = (b, s // block_k)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k,
+                          sm_scale=1.0 / math.sqrt(d)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_k, h, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),      # running max
+            pltpu.VMEM((h,), jnp.float32),      # running sum
+            pltpu.VMEM((h, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

@@ -1,0 +1,41 @@
+"""Jitted wrapper: GQA repeat + cache padding for the decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, block_k: int = 512) -> jax.Array:
+    """q: (B, 1, H, D) or (B, H, D); caches: (B, S, H_kv, D);
+    cache_len: (B,) -> same rank as q."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    h_kv = k_cache.shape[2]
+    if h_kv != h:
+        rep = h // h_kv
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    bk = min(block_k, s)
+    pad = (-s) % bk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = decode_attention_pallas(q, k_cache, v_cache,
+                                  cache_len.astype(jnp.int32), block_k=bk,
+                                  interpret=_interpret_default())
+    return out[:, None] if squeeze else out

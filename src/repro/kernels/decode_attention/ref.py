@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the split-K decode-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray,
+                         cache_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, D); caches: (B, S, H, D); cache_len: (B,) -> (B, H, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(d)
+    valid = jnp.arange(k_cache.shape[1])[None, :] < cache_len[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: causal flash attention (prefill hot loop).
+
+Online-softmax tiling: the grid walks (batch*heads, q_blocks); each step
+keeps a (block_q, d) query tile in VMEM, streams the K/V sequence through
+VMEM in (block_k, d) tiles via an inner loop, and maintains running
+(max, sum, accumulator) statistics so the (S, S) score matrix never
+materializes.  Block shapes default to MXU-aligned 128 multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  causal: bool, sm_scale: float, kv_len: int):
+    q = q_ref[0].astype(jnp.float32) * sm_scale       # (block_q, d)
+    q_idx = pl.program_id(1)
+    seq_len = k_ref.shape[1]
+    n_kv = seq_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                   # (block_q, block_k)
+        k_pos = i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len                         # padded keys
+        if causal:
+            q_pos = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    if causal:
+        upper = ((q_idx + 1) * block_q + block_k - 1) // block_k
+    else:
+        upper = n_kv
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, kv_len: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, D) -> (BH, S, D).  S % block == 0 (ops.py pads;
+    ``kv_len`` masks padded keys)."""
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    sm_scale = 1.0 / math.sqrt(d)
+    grid = (bh, s // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, sm_scale=sm_scale,
+                          kv_len=kv_len if kv_len is not None else s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Jitted wrapper: (B, S, H, D) layout, GQA repeat, padding to block size."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, H_kv, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    h_kv = k.shape[2]
+    if h_kv != h:
+        rep = h // h_kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad = (-s) % max(bq, bk)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, block_q=bq,
+                                 block_k=bk, kv_len=s,
+                                 interpret=_interpret_default())
+    out = out[:, :s].reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the PQ ADC scan kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pq_scan_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut: (B, S, 256) f32; codes: (B, N, S) uint8 -> (B, N) f32."""
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],                       # (B, 1, S, 256)
+        codes[:, :, :, None].astype(jnp.int32),   # (B, N, S, 1)
+        axis=-1)[..., 0]                          # (B, N, S)
+    return gathered.sum(axis=-1)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init).  Everything else follows.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import all_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[sfu]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every array shape in an HLO type string (handles
+    tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _computation_weights(hlo_text: str) -> dict[str, int]:
+    """Execution multiplicity per computation: while-loop bodies run
+    trip_count times but appear once in the module text, so anything inside
+    them (collectives!) must be weighted.  Handles nested loops (layer scan
+    inside a microbatch scan) by propagating weights parent -> child."""
+    parent: dict[str, tuple[str, int]] = {}   # body -> (enclosing, trips)
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" ") and "{" in line:
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            current = m2.group(1) if m2 else None
+            continue
+        if " while(" in line and "body=" in line and current:
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            mt = re.search(r"known_trip_count[^0-9]*(\d+)", line)
+            if mb:
+                parent[mb.group(1)] = (current,
+                                       int(mt.group(1)) if mt else 1)
+
+    weights: dict[str, int] = {}
+
+    def weight_of(comp: str, depth=0) -> int:
+        if comp in weights:
+            return weights[comp]
+        if comp not in parent or depth > 16:
+            return 1
+        enc, t = parent[comp]
+        w = t * weight_of(enc, depth + 1)
+        weights[comp] = w
+        return w
+
+    for b in parent:
+        weight_of(b)
+    return weights
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-op byte counts from optimized HLO (per-device
+    program), weighted by enclosing while-loop trip counts.  Counts the op
+    result shape; ``-done`` ops are skipped so async pairs are not double
+    counted."""
+    weights = _computation_weights(hlo_text)
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    weight = 1
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if line and not line.startswith(" ") and "{" in line:
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            weight = weights.get(m2.group(1), 1) if m2 else 1
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+([\w\-]+)\(",
+                     stripped)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        for coll in _COLLECTIVES:
+            if op == coll or op == coll + "-start":
+                stats[coll]["count"] += weight
+                stats[coll]["bytes"] += weight * _shape_bytes(type_str)
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def memory_stats(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("generated_code_size_in_bytes",
+                     "argument_size_in_bytes", "output_size_in_bytes",
+                     "alias_size_in_bytes", "temp_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        out["per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover - backend specific
+        out["error"] = str(e)
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, verbose: bool = True) -> dict:
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name, "step": shape.step,
+           "mesh": mesh_name, "n_devices": mesh.size,
+           "skip_reason": shape.skip}
+    try:
+        from repro.distributed.sharding import to_named
+        with mesh:
+            prog = build_cell(arch, shape, mesh)
+            jitted = jax.jit(prog.fn,
+                             in_shardings=to_named(prog.in_specs, mesh),
+                             out_shardings=to_named(prog.out_specs, mesh),
+                             donate_argnums=prog.donate)
+            lowered = jitted.lower(*prog.abstract_inputs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            "memory": memory_stats(compiled),
+            "collectives": collective_stats(compiled.as_text()),
+        })
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch_id}__{shape_name}__{mesh_name}.json"
+    fname.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        status = "OK" if rec.get("ok") else f"FAIL ({rec.get('error')})"
+        print(f"[dryrun] {arch_id}:{shape_name} mesh={mesh_name} {status} "
+              f"({rec['wall_s']}s)", flush=True)
+        if rec.get("ok"):
+            mem = rec["memory"].get("per_device_bytes", 0)
+            print(f"  flops/device={rec['flops']:.3e} "
+                  f"bytes/device={rec['bytes_accessed']:.3e} "
+                  f"coll_bytes/device={rec['collectives']['total_bytes']:.3e} "
+                  f"mem/device={mem/2**30:.2f}GiB", flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="Multi-pod dry-run")
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", choices=["single", "multi", "both"],
+                   default="both")
+    p.add_argument("--include-skipped", action="store_true",
+                   help="also lower the noted-skip long_500k SW variants")
+    p.add_argument("--out", default="dryrun_results")
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args(argv)
+    out_dir = Path(args.out)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = [(a, s) for a, s in all_cells(include_skipped=True)
+             if (args.arch is None or a.arch_id == args.arch)
+             and (args.shape is None or s.name == args.shape)
+             and (s.skip is None or args.include_skipped or
+                  args.shape == s.name)]
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            fname = out_dir / f"{arch.arch_id}__{shape.name}__{mesh_name}.json"
+            if args.skip_existing and fname.exists():
+                if json.loads(fname.read_text()).get("ok"):
+                    continue
+            rec = run_cell(arch.arch_id, shape.name, multi, out_dir)
+            failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The production pod is 16x16 = 256 chips
+(``data`` x ``model``); the multi-pod mesh prepends a ``pod`` axis
+(2 x 16 x 16 = 512 chips) that extends data parallelism hierarchically
+(gradient all-reduce crosses ICI within a pod, then DCI across pods).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh over the single real device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axis names (includes ``pod`` when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

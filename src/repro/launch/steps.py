@@ -1,0 +1,396 @@
+"""Cell programs: (step fn, shardings, abstract inputs) per (arch x shape).
+
+The dry-run lowers exactly these programs; smoke tests and examples run the
+same builders against reduced configs with concrete arrays, so the lowered
+program and the executed program are one code path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.distributed.hints import sharding_hints
+from repro.launch.mesh import all_axes, dp_axes
+from repro.models import gnn, recsys
+from repro.models import transformer as tr
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class CellProgram:
+    name: str
+    fn: Callable               # fn(*args)
+    abstract_inputs: tuple     # pytrees of ShapeDtypeStruct, aligned to args
+    in_specs: tuple            # PartitionSpec pytrees, aligned to args
+    out_specs: Any
+    donate: tuple[int, ...] = ()
+    static_meta: dict | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _abstract_opt(params_abs):
+    return jax.eval_shape(init_opt_state, params_abs)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cfg(arch: ArchSpec, shape: ShapeSpec) -> tr.TransformerConfig:
+    cfg = arch.config
+    if shape.variant:
+        cfg = replace(cfg, **shape.variant)
+    return cfg
+
+
+def build_lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                  opt_cfg: AdamWConfig = AdamWConfig(),
+                  microbatches: int = 1,
+                  sequence_parallel: bool = True) -> CellProgram:
+    cfg = _lm_cfg(arch, shape)
+    dp = dp_axes(mesh)
+    B = shape.dims["global_batch"]
+    S = shape.dims["seq_len"]
+    name = f"{arch.arch_id}:{shape.name}"
+
+    if shape.step == "train":
+        params_abs = tr.abstract_params(cfg, jnp.float32)
+        state_abs = {"params": params_abs, "opt": _abstract_opt(params_abs)}
+        batch_abs = {"tokens": _sds((B, S), jnp.int32),
+                     "labels": _sds((B, S), jnp.int32)}
+        pspec = sh.lm_param_specs(params_abs, mesh, train=True)
+        state_spec = {"params": pspec,
+                      "opt": {"m": pspec, "v": pspec, "step": P()}}
+        batch_spec = {"tokens": sh.lm_batch_specs(mesh, B),
+                      "labels": sh.lm_batch_specs(mesh, B)}
+        sp_spec = P(dp, "model", None) if sequence_parallel else None
+        mb = microbatches
+        assert B % mb == 0
+        bx = sh.divisible_axes(B // mb, dp, mesh)
+        moe_spec = P(bx, "model", None, None)
+
+        def loss(p, tokens, labels):
+            return tr.loss_fn(p, tokens, labels, cfg, remat=True,
+                              sp_spec=sp_spec)
+
+        def step(state, batch):
+            with sharding_hints(moe_dispatch=moe_spec):
+                if mb == 1:
+                    loss_val, grads = jax.value_and_grad(loss)(
+                        state["params"], batch["tokens"], batch["labels"])
+                else:
+                    # gradient accumulation over microbatches
+                    toks = batch["tokens"].reshape(mb, B // mb, S)
+                    labs = batch["labels"].reshape(mb, B // mb, S)
+
+                    def acc_fn(carry, xs):
+                        l, g = jax.value_and_grad(loss)(
+                            state["params"], xs[0], xs[1])
+                        return (carry[0] + l,
+                                jax.tree_util.tree_map(
+                                    jnp.add, carry[1], g)), None
+
+                    zeros = jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        state["params"])
+                    (loss_val, grads), _ = jax.lax.scan(
+                        acc_fn, (jnp.zeros(()), zeros), (toks, labs))
+                    loss_val = loss_val / mb
+                    grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            new_p, new_opt, gnorm = adamw_update(
+                grads, state["opt"], state["params"], opt_cfg)
+            return ({"params": new_p, "opt": new_opt},
+                    {"loss": loss_val, "grad_norm": gnorm})
+
+        return CellProgram(name, step, (state_abs, batch_abs),
+                           (state_spec, batch_spec),
+                           (state_spec, {"loss": P(), "grad_norm": P()}),
+                           donate=(0,))
+
+    params_abs = jax.eval_shape(
+        tr.quantize_for_serving, tr.abstract_params(cfg, jnp.float32))
+    pspec = sh.lm_param_specs(params_abs, mesh, train=False)
+
+    if shape.step == "prefill":
+        tokens_abs = _sds((B, S), jnp.int32)
+
+        bx = sh.divisible_axes(B, dp, mesh)
+        moe_spec = P(bx, "model", None, None)
+
+        def step(params, tokens):
+            with sharding_hints(moe_dispatch=moe_spec):
+                return tr.prefill(params, tokens, cfg)
+
+        cache_abs = jax.eval_shape(step, params_abs, tokens_abs)[1]
+        return CellProgram(
+            name, step, (params_abs, tokens_abs),
+            (pspec, sh.lm_batch_specs(mesh, B)),
+            (P(sh.divisible_axes(B, dp, mesh), "model"),
+             sh.lm_cache_specs(cache_abs, mesh)))
+
+    if shape.step == "decode":
+        cache_abs = tr.abstract_cache(cfg, B, S)
+        cache_spec = sh.lm_cache_specs(cache_abs, mesh)
+        io = sh.lm_decode_io_specs(mesh, B)
+
+        bx = sh.divisible_axes(B, dp, mesh)
+        moe_spec = P(bx, "model", None, None)
+
+        def step(params, cache, token, pos):
+            with sharding_hints(moe_dispatch=moe_spec):
+                return tr.decode_step(params, cache, token, pos, cfg)
+
+        return CellProgram(
+            name, step,
+            (params_abs, cache_abs, _sds((B,), jnp.int32),
+             _sds((B,), jnp.int32)),
+            (pspec, cache_spec, io["token"], io["pos"]),
+            (io["logits"], cache_spec),
+            donate=(1,))
+
+    raise ValueError(shape.step)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad512(n: int) -> int:
+    return -(-n // 512) * 512
+
+
+def gnn_batch_abstract(shape: ShapeSpec) -> tuple[dict, dict | None]:
+    """Returns (batch ShapeDtypeStructs, static metadata).
+
+    Node AND edge arrays are padded to a 512-multiple so they shard over any
+    mesh.  Conventions: padded edges carry edge_mask=0 and point at a pad
+    node; pad nodes have zero features, label_mask=0 and (molecule)
+    graph_id == n_graphs (OOB -> dropped by segment_sum)."""
+    d = shape.dims
+    if shape.name == "minibatch_lg":
+        b, (f1, f2) = d["batch_nodes"], d["fanout"]
+        n_sub = _pad512(b * (1 + f1 + f1 * f2))
+        e_sub = _pad512(b * f1 + b * f1 * f2)
+        return ({"x": _sds((n_sub, d["d_feat"]), jnp.float32),
+                 "edges": _sds((2, e_sub), jnp.int32),
+                 "edge_mask": _sds((e_sub,), jnp.float32),
+                 "labels": _sds((n_sub,), jnp.int32),
+                 "label_mask": _sds((n_sub,), jnp.float32)}, None)
+    if shape.name == "molecule":
+        n = _pad512(d["batch"] * d["n_nodes"])
+        e = _pad512(d["batch"] * d["n_edges"])
+        return ({"x": _sds((n, d["d_feat"]), jnp.float32),
+                 "edges": _sds((2, e), jnp.int32),
+                 "edge_mask": _sds((e,), jnp.float32),
+                 "graph_ids": _sds((n,), jnp.int32),
+                 "y": _sds((d["batch"],), jnp.float32)},
+                {"n_graphs": d["batch"]})
+    e = _pad512(d["n_edges"])
+    n = _pad512(d["n_nodes"])
+    return ({"x": _sds((n, d["d_feat"]), jnp.float32),
+             "edges": _sds((2, e), jnp.int32),
+             "edge_mask": _sds((e,), jnp.float32),
+             "labels": _sds((n,), jnp.int32),
+             "label_mask": _sds((n,), jnp.float32)}, None)
+
+
+def build_gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                   opt_cfg: AdamWConfig = AdamWConfig()) -> CellProgram:
+    from repro.configs.pna import config_for_shape
+    cfg = config_for_shape(shape)
+    ax = all_axes(mesh)
+    name = f"{arch.arch_id}:{shape.name}"
+    batch_abs, meta = gnn_batch_abstract(shape)
+    n_graphs = (meta or {}).get("n_graphs")
+
+    params_abs = gnn.abstract_params(cfg)
+    state_abs = {"params": params_abs, "opt": _abstract_opt(params_abs)}
+    rep = jax.tree_util.tree_map(lambda _: P(), params_abs)
+    state_spec = {"params": rep, "opt": {"m": rep, "v": rep, "step": P()}}
+
+    n_nodes = batch_abs["x"].shape[0]
+    n_edges = batch_abs["edges"].shape[1]
+    node_ax = sh.divisible_axes(n_nodes, ax, mesh)
+    edge_ax = sh.divisible_axes(n_edges, ax, mesh)
+
+    def batch_spec_of(k, v):
+        if k in ("edges",):
+            return P(None, edge_ax)
+        if k in ("edge_mask",):
+            return P(edge_ax)
+        if k in ("x",):
+            return P(node_ax, None)
+        if k in ("labels", "label_mask", "graph_ids"):
+            return P(node_ax)
+        return P()
+
+    batch_spec = {k: batch_spec_of(k, v) for k, v in batch_abs.items()}
+    node_spec = P(node_ax, None)
+    edge_spec = P(edge_ax, None)
+
+    def loss(p, batch):
+        b = dict(batch)
+        if n_graphs is not None:
+            b["n_graphs"] = n_graphs
+        return gnn.loss_fn(p, b, cfg)
+
+    def step(state, batch):
+        with sharding_hints(gnn_nodes=node_spec, gnn_edges=edge_spec):
+            loss_val, grads = jax.value_and_grad(loss)(state["params"], batch)
+        new_p, new_opt, gnorm = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg)
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss_val, "grad_norm": gnorm})
+
+    return CellProgram(name, step, (state_abs, batch_abs),
+                       (state_spec, batch_spec),
+                       (state_spec, {"loss": P(), "grad_norm": P()}),
+                       donate=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+_RECSYS = {
+    "dlrm-rm2": {
+        "init": recsys.dlrm_init, "loss": recsys.dlrm_loss,
+        "fwd": lambda p, b, c: recsys.dlrm_forward(p, b["dense"], b["sparse"], c),
+        "score": lambda p, b, c: jax.lax.top_k(
+            recsys.dlrm_score_candidates(p, b["dense"], b["sparse"],
+                                         b["candidates"], c), 100),
+    },
+    "two-tower-retrieval": {
+        "init": recsys.two_tower_init, "loss": recsys.two_tower_loss,
+        "fwd": lambda p, b, c: recsys.user_tower(p, b["user_ids"],
+                                                 b["hist_ids"], c),
+        "score": lambda p, b, c: recsys.two_tower_score_candidates(
+            p, b["user_ids"], b["hist_ids"], b["candidates"], c, 100),
+    },
+    "xdeepfm": {
+        "init": recsys.xdeepfm_init, "loss": recsys.xdeepfm_loss,
+        "fwd": lambda p, b, c: recsys.xdeepfm_forward(p, b["sparse"], c),
+        "score": lambda p, b, c: jax.lax.top_k(
+            recsys.xdeepfm_score_candidates(p, b["sparse"], b["candidates"],
+                                            c), 100),
+    },
+    "mind": {
+        "init": recsys.mind_init, "loss": recsys.mind_loss,
+        "fwd": lambda p, b, c: recsys.mind_interests(p, b["hist_ids"], c),
+        "score": lambda p, b, c: recsys.mind_score_candidates(
+            p, b["hist_ids"], b["candidates"], c, 100),
+    },
+}
+
+
+def recsys_batch_abstract(arch_id: str, cfg, shape: ShapeSpec) -> dict:
+    B = shape.dims["batch"]
+    n_cand = shape.dims.get("n_candidates", 0)
+    if arch_id == "dlrm-rm2":
+        b = {"dense": _sds((B, cfg.n_dense), jnp.float32),
+             "sparse": _sds((B, cfg.n_sparse), jnp.int32)}
+    elif arch_id == "two-tower-retrieval":
+        b = {"user_ids": _sds((B,), jnp.int32),
+             "hist_ids": _sds((B, cfg.hist_len), jnp.int32)}
+        if shape.step == "train":
+            b["item_ids"] = _sds((B,), jnp.int32)
+            b["log_q"] = _sds((B,), jnp.float32)
+    elif arch_id == "xdeepfm":
+        b = {"sparse": _sds((B, cfg.n_sparse), jnp.int32)}
+    elif arch_id == "mind":
+        b = {"hist_ids": _sds((B, cfg.hist_len), jnp.int32)}
+        if shape.step == "train":
+            b["item_ids"] = _sds((B,), jnp.int32)
+    else:
+        raise KeyError(arch_id)
+    if shape.step == "train" and arch_id in ("dlrm-rm2", "xdeepfm"):
+        b["labels"] = _sds((B,), jnp.float32)
+    if shape.step == "score":
+        b["candidates"] = _sds((n_cand,), jnp.int32)
+    return b
+
+
+def build_recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                      opt_cfg: AdamWConfig = AdamWConfig()) -> CellProgram:
+    cfg = arch.config
+    ops = _RECSYS[arch.arch_id]
+    ax = all_axes(mesh)
+    name = f"{arch.arch_id}:{shape.name}"
+    batch_abs = recsys_batch_abstract(arch.arch_id, cfg, shape)
+    params_abs = jax.eval_shape(
+        lambda k: ops["init"](k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspec = sh.recsys_param_specs(params_abs, mesh)
+
+    def batch_spec_of(k, leaf):
+        if shape.step == "score":
+            if k == "candidates":
+                return P(sh.divisible_axes(leaf.shape[0], ax, mesh))
+            return P(*([None] * len(leaf.shape)))    # single user, replicated
+        bx = sh.divisible_axes(leaf.shape[0], ax, mesh)
+        return P(bx, *([None] * (len(leaf.shape) - 1)))
+
+    batch_spec = {k: batch_spec_of(k, v) for k, v in batch_abs.items()}
+
+    if shape.step == "train":
+        state_abs = {"params": params_abs, "opt": _abstract_opt(params_abs)}
+        state_spec = {"params": pspec,
+                      "opt": {"m": pspec, "v": pspec, "step": P()}}
+
+        def step(state, batch):
+            loss_val, grads = jax.value_and_grad(
+                lambda p: ops["loss"](p, batch, cfg))(state["params"])
+            new_p, new_opt, gnorm = adamw_update(
+                grads, state["opt"], state["params"], opt_cfg)
+            return ({"params": new_p, "opt": new_opt},
+                    {"loss": loss_val, "grad_norm": gnorm})
+
+        return CellProgram(name, step, (state_abs, batch_abs),
+                           (state_spec, batch_spec),
+                           (state_spec, {"loss": P(), "grad_norm": P()}),
+                           donate=(0,))
+
+    if shape.step == "forward":
+        def step(params, batch):
+            return ops["fwd"](params, batch, cfg)
+
+        out_abs = jax.eval_shape(step, params_abs, batch_abs)
+        out_spec = jax.tree_util.tree_map(
+            lambda leaf: P(sh.divisible_axes(leaf.shape[0], ax, mesh),
+                           *([None] * (len(leaf.shape) - 1))), out_abs)
+        return CellProgram(name, step, (params_abs, batch_abs),
+                           (pspec, batch_spec), out_spec)
+
+    if shape.step == "score":
+        def step(params, batch):
+            return ops["score"](params, batch, cfg)
+
+        return CellProgram(name, step, (params_abs, batch_abs),
+                           (pspec, batch_spec), [P(), P()])
+
+    raise ValueError(shape.step)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+               **kw) -> CellProgram:
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape, mesh, **kw)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape, mesh, **kw)
+    if arch.family == "recsys":
+        return build_recsys_cell(arch, shape, mesh, **kw)
+    raise ValueError(arch.family)

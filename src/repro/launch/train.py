@@ -1,0 +1,72 @@
+"""Training launcher: build a cell program for an assigned arch and run real
+steps on the available mesh (CPU host mesh by default; the same builders the
+dry-run compiles for 512 chips).
+
+Example (reduced, CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --steps 5 --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.synthetic import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tr
+from repro.training.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.training.optim import AdamWConfig
+from repro.training.train_loop import init_state, make_train_step
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="granite-3-2b")
+    p.add_argument("--steps", type=int, default=5)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--reduced", action="store_true",
+                   help="use the arch's reduced config (CPU-sized)")
+    p.add_argument("--ckpt", default=None)
+    args = p.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    assert arch.family == "lm", "train launcher covers LM archs; see " \
+        "launch.steps.build_cell for GNN/recsys cells"
+    cfg = arch.reduced() if args.reduced else arch.config
+    print(f"[train] {arch.arch_id} ({cfg.param_count()/1e6:.1f}M params, "
+          f"reduced={args.reduced})")
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(params)
+
+    def loss_fn(p_, batch):
+        return tr.loss_fn(p_, batch["tokens"], batch["labels"], cfg)
+
+    step_fn = make_train_step(loss_fn, AdamWConfig(lr=1e-3, warmup_steps=10))
+    writer = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+    start = 0
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        state, start = restore(args.ckpt, state)
+        print(f"[train] resumed from step {start}")
+    data = lm_batches(cfg.vocab_size, args.batch, args.seq,
+                      args.steps - start)
+    for i, batch in enumerate(data, start=start + 1):
+        t0 = time.time()
+        state, m = step_fn(state, {k: jnp.asarray(v)
+                                   for k, v in batch.items()})
+        print(f"[train] step {i} loss={float(m['loss']):.4f} "
+              f"({time.time()-t0:.2f}s)")
+        if writer:
+            writer.save(i, state)
+    if writer:
+        writer.wait()
+
+
+if __name__ == "__main__":
+    main()

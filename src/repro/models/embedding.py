@@ -1,0 +1,85 @@
+"""EmbeddingBag and sharded embedding-table substrate.
+
+JAX has no native ``nn.EmbeddingBag`` or CSR sparse; per the brief we build it
+from ``jnp.take`` + ``jax.ops.segment_sum``.  Multi-field recsys tables are
+stacked into one flat (sum_of_vocabs, dim) array so a batch of lookups across
+all fields lowers to a single gather (one HLO gather per step instead of 26+),
+which row-shards cleanly across the full device mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_table(key: jax.Array, vocab: int, dim: int,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) / jnp.sqrt(dim)).astype(dtype)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
+                  num_segments: int, mode: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """table: (V, D); ids/segment_ids: (N,).  Returns (num_segments, D)."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments)
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32),
+                                  segment_ids, num_segments)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments)
+    raise ValueError(mode)
+
+
+class StackedTables:
+    """Layout helper: n_fields tables flattened into one (sum_V, D) array."""
+
+    def __init__(self, vocab_sizes: tuple[int, ...], dim: int,
+                 pad_rows_to: int = 512):
+        self.vocab_sizes = tuple(int(v) for v in vocab_sizes)
+        self.dim = dim
+        self.offsets = np.concatenate([[0], np.cumsum(self.vocab_sizes)])
+        # pad total rows so tables row-shard over any power-of-two mesh
+        raw = int(self.offsets[-1])
+        self.total_rows = -(-raw // pad_rows_to) * pad_rows_to
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> jax.Array:
+        return init_table(key, self.total_rows, self.dim, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct((self.total_rows, self.dim), dtype)
+
+    def lookup(self, table: jax.Array, field_ids: jax.Array) -> jax.Array:
+        """field_ids: (B, n_fields) per-field local ids -> (B, n_fields, D)."""
+        off = jnp.asarray(self.offsets[:-1], dtype=field_ids.dtype)
+        flat = field_ids + off[None, :]
+        return jnp.take(table, flat.reshape(-1), axis=0).reshape(
+            field_ids.shape + (self.dim,))
+
+
+def mlp_init(key: jax.Array, dims: tuple[int, ...], dtype=jnp.float32) -> list:
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k1, key = jax.random.split(key)
+        layers.append({
+            "w": (jax.random.truncated_normal(k1, -3, 3, (a, b))
+                  / jnp.sqrt(a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        })
+    return layers
+
+
+def mlp_apply(layers: list, x: jax.Array, final_act: bool = False) -> jax.Array:
+    n = len(layers)
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

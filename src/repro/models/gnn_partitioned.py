@@ -1,0 +1,91 @@
+"""Dst-partitioned PNA (perf iteration for the collective-bound cells).
+
+Baseline PNA shards edges arbitrarily: every ``segment_*`` op scatters into
+a full (N, d) node array per device and XLA all-reduces it -- ~40 full-size
+all-reduces per step (35.6 GiB/device on ogb_products, see EXPERIMENTS.md
+S Perf).
+
+This variant changes the input contract: the data loader delivers edges
+**partitioned by destination shard** (our sampler can; any production graph
+loader does), with dst indices local to the shard.  Aggregation then stays
+shard-local; the only cross-device traffic is one all-gather of node
+features per layer (forward) and its reduce-scatter transpose (backward):
+2 x (N x d) per layer instead of ~10.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import gnn
+from repro.models.embedding import mlp_apply
+
+
+def forward_partitioned(params: dict, x_local, edges_local, cfg,
+                        mesh: Mesh, axes, edge_mask_local=None,
+                        compute_dtype=jnp.float32):
+    """x_local: (N/shards, F) node shard; edges_local: (2, E/shards) with
+    src GLOBAL ids and dst LOCAL ids.  Returns local logits."""
+
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+
+    def body(xl, el, ml):
+        src, dst = el[0], el[1]
+        n_local = xl.shape[0]
+        ones = jnp.ones_like(dst, jnp.float32)
+        if ml is not None:
+            ones = ones * ml
+        degree = jax.ops.segment_sum(ones, dst, n_local)
+
+        h_local = mlp_apply(params["encoder"], xl.astype(compute_dtype),
+                            final_act=True)
+        for lp in params["layers"]:
+            # one all-gather per layer: every shard needs remote sources
+            h_full = jax.lax.all_gather(h_local, axes, tiled=True)
+            h_src = jnp.take(h_full, src, axis=0)
+            h_dst = jnp.take(h_local, dst, axis=0)
+            msg = mlp_apply(lp["msg"],
+                            jnp.concatenate([h_src, h_dst], -1),
+                            final_act=True)
+            if ml is not None:
+                msg = msg * ml[:, None]
+            aggs = gnn._aggregate(msg, dst, n_local, degree, cfg)
+            towers = gnn._scale(aggs, degree, cfg)
+            upd = mlp_apply(lp["upd"],
+                            jnp.concatenate([h_local, towers], -1))
+            h_local = h_local + upd
+            h_local = h_local * jax.lax.rsqrt(
+                jnp.mean(h_local * h_local, -1, keepdims=True) + 1e-6) \
+                * lp["ln"]
+        return mlp_apply(params["head"], h_local)
+
+    in_specs = (P(axes, None), P(None, axes),
+                P(axes) if edge_mask_local is not None else P(axes))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axes, None), P(None, axes), P(axes)),
+                   out_specs=P(axes, None), check_vma=False)
+    if edge_mask_local is None:
+        edge_mask_local = jnp.ones(edges_local.shape[1], jnp.float32)
+    return fn(x_local, edges_local, edge_mask_local)
+
+
+def loss_partitioned(params, batch, cfg, mesh, axes):
+    out = forward_partitioned(params, batch["x"], batch["edges"], cfg,
+                              mesh, axes,
+                              edge_mask_local=batch.get("edge_mask"))
+    logits = out.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    mask = batch.get("label_mask")
+    per = logz - gold
+    if mask is not None:
+        return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(per)

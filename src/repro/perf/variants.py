@@ -1,0 +1,226 @@
+"""Perf-iteration cell variants (EXPERIMENTS.md §Perf).
+
+Each builder mirrors a baseline cell from ``launch.steps`` with one
+hypothesis-driven change so the dry-run can measure the delta:
+
+  LM decode  v1  split-K shard_map attention (kills cache resharding)
+             v2  + int8 KV cache with per-(token, head) scales (paper §4
+                 assumes 8-bit KV; halves the memory term)
+  MoE train  v1  gradient-accumulation microbatching (activation memory)
+             v2  Megatron-style expert FFN sharding (weight all-gather ->
+                 activation reduce-scatter)
+  GNN train  v1  dst-partitioned shard-local aggregation (collective term)
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.distributed.decode_attn import make_distributed_decode_attn
+from repro.distributed.hints import sharding_hints
+from repro.launch.mesh import all_axes, dp_axes
+from repro.launch.steps import (CellProgram, _abstract_opt, _sds,
+                                build_lm_cell, gnn_batch_abstract)
+from repro.models import transformer as tr
+from repro.models import common as cm
+from repro.training.optim import AdamWConfig, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# LM decode variants
+# ---------------------------------------------------------------------------
+
+def quantized_cache_abstract(cfg: tr.TransformerConfig, batch: int,
+                             s_max: int):
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    scale = (cfg.n_layers, batch, s_max, cfg.n_kv_heads)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(scale, jnp.bfloat16),
+            "v_scale": jax.ShapeDtypeStruct(scale, jnp.bfloat16)}
+
+
+def _quantize_token(x):
+    """x: (B, KV, D) -> int8 codes + (B, KV) scale."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = (amax / 127.0 + 1e-8).astype(jnp.bfloat16)
+    q = jnp.clip(jnp.round(x / scale[..., None].astype(x.dtype)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_step_variant(params, cache, token, pos, cfg, attn_impl,
+                        int8_kv: bool, compute_dtype=jnp.bfloat16):
+    """decode_step with injected split-K attention and optional int8 KV."""
+    B = token.shape[0]
+    embed = cm.maybe_dequant(params["embed"], compute_dtype)
+    x = jnp.take(embed, token, axis=0)[:, None, :]
+
+    def layer_fn(x, scanned):
+        if int8_kv:
+            lp, kc, vc, ks, vs = scanned
+        else:
+            lp, kc, vc = scanned
+        xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = tr._qkv(xn, lp, cfg, pos[:, None], compute_dtype)
+        b_idx = jnp.arange(B)
+        if int8_kv:
+            kq, ks_new = _quantize_token(k_new[:, 0])
+            vq, vs_new = _quantize_token(v_new[:, 0])
+            kc = kc.at[b_idx, pos].set(kq)
+            vc = vc.at[b_idx, pos].set(vq)
+            ks = ks.at[b_idx, pos].set(ks_new)
+            vs = vs.at[b_idx, pos].set(vs_new)
+            out = attn_impl(q, kc, vc, ks, vs, pos + 1)
+            new_scan = (kc, vc, ks, vs)
+        else:
+            kc = kc.astype(compute_dtype).at[b_idx, pos].set(k_new[:, 0])
+            vc = vc.astype(compute_dtype).at[b_idx, pos].set(v_new[:, 0])
+            out = attn_impl(q, kc, vc, pos + 1)
+            new_scan = (kc, vc)
+        wo = cm.maybe_dequant(lp["wo"], compute_dtype)
+        x = x + (out.reshape(B, 1, cfg.n_heads * cfg.d_head)
+                 @ wo).astype(x.dtype)
+        xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = tr.moe_ffn(xn, lp, cfg, compute_dtype)
+        else:
+            h = tr.dense_ffn(xn, lp, compute_dtype, cfg.ffn_type)
+        return x + h, new_scan
+
+    if int8_kv:
+        xs = (params["layers"], cache["k"], cache["v"], cache["k_scale"],
+              cache["v_scale"])
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+    x, ys = jax.lax.scan(layer_fn, x, xs)
+    x = cm.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = cm.maybe_dequant(params["head"], compute_dtype)
+    logits = (x.astype(compute_dtype) @ head)[:, 0]
+    if int8_kv:
+        new_cache = {"k": ys[0], "v": ys[1], "k_scale": ys[2],
+                     "v_scale": ys[3]}
+    else:
+        new_cache = {"k": ys[0], "v": ys[1]}
+    return logits, new_cache
+
+
+def build_lm_decode_variant(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                            splitk: bool = True,
+                            int8_kv: bool = False) -> CellProgram:
+    cfg = arch.config
+    if shape.variant:
+        cfg = replace(cfg, **shape.variant)
+    dp = dp_axes(mesh)
+    B = shape.dims["global_batch"]
+    S = shape.dims["seq_len"]
+    params_abs = jax.eval_shape(
+        tr.quantize_for_serving, tr.abstract_params(cfg, jnp.float32))
+    pspec = sh.lm_param_specs(params_abs, mesh, train=False)
+    io = sh.lm_decode_io_specs(mesh, B)
+    bx = sh.divisible_axes(B, dp, mesh)
+    moe_spec = P(bx, "model", None, None)
+    attn = make_distributed_decode_attn(mesh, cfg.q_per_kv,
+                                        quantized=int8_kv)
+
+    if int8_kv:
+        cache_abs = quantized_cache_abstract(cfg, B, S)
+        cache_spec = {
+            "k": P(None, bx, "model", None, None),
+            "v": P(None, bx, "model", None, None),
+            "k_scale": P(None, bx, "model", None),
+            "v_scale": P(None, bx, "model", None)}
+    else:
+        cache_abs = tr.abstract_cache(cfg, B, S)
+        cache_spec = sh.lm_cache_specs(cache_abs, mesh)
+
+    def step(params, cache, token, pos):
+        with sharding_hints(moe_dispatch=moe_spec):
+            return decode_step_variant(params, cache, token, pos, cfg,
+                                       attn, int8_kv)
+
+    name = (f"{arch.arch_id}:{shape.name}:"
+            f"{'splitk_int8kv' if int8_kv else 'splitk'}")
+    return CellProgram(
+        name, step,
+        (params_abs, cache_abs, _sds((B,), jnp.int32), _sds((B,), jnp.int32)),
+        (pspec, cache_spec, io["token"], io["pos"]),
+        (io["logits"], cache_spec), donate=(1,))
+
+
+# ---------------------------------------------------------------------------
+# MoE train variants (microbatching / Megatron expert sharding)
+# ---------------------------------------------------------------------------
+
+def build_lm_train_variant(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                           microbatches: int = 1,
+                           moe_megatron: bool = False,
+                           sequence_parallel: bool = True) -> CellProgram:
+    prog = build_lm_cell(arch, shape, mesh, microbatches=microbatches,
+                         sequence_parallel=sequence_parallel)
+    if moe_megatron:
+        cfg = arch.config
+        params_abs = tr.abstract_params(cfg, jnp.float32)
+        pspec = sh.lm_param_specs(params_abs, mesh, train=True,
+                                  moe_megatron=True)
+        state_spec = {"params": pspec,
+                      "opt": {"m": pspec, "v": pspec, "step": P()}}
+        prog.in_specs = (state_spec, prog.in_specs[1])
+        prog.out_specs = (state_spec, prog.out_specs[1])
+    prog.name = (f"{arch.arch_id}:{shape.name}:mb{microbatches}"
+                 + ("_megatron" if moe_megatron else "")
+                 + ("" if sequence_parallel else "_nosp"))
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# GNN dst-partitioned variant
+# ---------------------------------------------------------------------------
+
+def build_gnn_partitioned_variant(arch: ArchSpec, shape: ShapeSpec,
+                                  mesh: Mesh) -> CellProgram:
+    from repro.configs.pna import config_for_shape
+    from repro.models import gnn as gnn_mod
+    from repro.models.gnn_partitioned import loss_partitioned
+    cfg = config_for_shape(shape)
+    ax = all_axes(mesh)
+    batch_abs, meta = gnn_batch_abstract(shape)
+    batch_abs.pop("graph_ids", None)
+    batch_abs.pop("y", None)
+    n_nodes = batch_abs["x"].shape[0]
+    n_edges = batch_abs["edges"].shape[1]
+    node_ax = sh.divisible_axes(n_nodes, ax, mesh)
+    edge_ax = sh.divisible_axes(n_edges, ax, mesh)
+    # the partitioned contract needs nodes and edges sharded the same way
+    axes = node_ax if node_ax == edge_ax else ("data",)
+
+    params_abs = gnn_mod.abstract_params(cfg)
+    state_abs = {"params": params_abs, "opt": _abstract_opt(params_abs)}
+    rep = jax.tree_util.tree_map(lambda _: P(), params_abs)
+    state_spec = {"params": rep, "opt": {"m": rep, "v": rep, "step": P()}}
+    batch_spec = {"x": P(axes, None), "edges": P(None, axes),
+                  "edge_mask": P(axes), "labels": P(axes),
+                  "label_mask": P(axes)}
+    opt_cfg = AdamWConfig()
+
+    def step(state, batch):
+        loss_val, grads = jax.value_and_grad(
+            lambda p: loss_partitioned(p, batch, cfg, mesh, axes))(
+                state["params"])
+        new_p, new_opt, gnorm = adamw_update(grads, state["opt"],
+                                             state["params"], opt_cfg)
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss_val, "grad_norm": gnorm})
+
+    return CellProgram(f"{arch.arch_id}:{shape.name}:dst_partitioned",
+                       step, (state_abs, batch_abs),
+                       (state_spec, batch_spec),
+                       (state_spec, {"loss": P(), "grad_norm": P()}),
+                       donate=(0,))

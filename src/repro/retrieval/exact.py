@@ -1,0 +1,27 @@
+"""Brute-force kNN (paper Case II: freshly encoded long-context databases
+skip ANN indexing and scan exactly)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def knn(queries: jax.Array, database: jax.Array, k: int = 5,
+        metric: str = "l2"):
+    """queries (Q, D) x database (N, D) -> (scores (Q, k), idx (Q, k))."""
+    if metric == "ip":
+        scores = queries @ database.T
+    elif metric == "cosine":
+        qn = queries / (jnp.linalg.norm(queries, axis=-1, keepdims=True) + 1e-9)
+        dn = database / (jnp.linalg.norm(database, axis=-1, keepdims=True) + 1e-9)
+        scores = qn @ dn.T
+    else:  # negative L2 distance
+        d2 = (jnp.sum(queries ** 2, -1)[:, None]
+              - 2.0 * queries @ database.T
+              + jnp.sum(database ** 2, -1)[None, :])
+        scores = -d2
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,79 @@
+"""Mini-batch k-means in JAX (IVF coarse quantizer + PQ codebook training)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest centroid per row (L2).  x: (N, D); centroids: (K, D)."""
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 constant per row
+    dots = x @ centroids.T
+    c2 = jnp.sum(centroids * centroids, axis=-1)
+    return jnp.argmin(c2[None, :] - 2.0 * dots, axis=-1)
+
+
+@jax.jit
+def _lloyd_step(x: jax.Array, centroids: jax.Array):
+    k = centroids.shape[0]
+    assign = _assign(x, centroids)
+    sums = jax.ops.segment_sum(x, assign, k)
+    counts = jax.ops.segment_sum(jnp.ones_like(assign, jnp.float32),
+                                 assign, k)
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None],
+                    centroids)
+    shift = jnp.sqrt(jnp.sum((new - centroids) ** 2, axis=-1)).max()
+    return new, shift
+
+
+def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int = 25,
+           tol: float = 1e-4):
+    """Lloyd's k-means.  Returns (centroids (k, D), assignments (N,))."""
+    n = x.shape[0]
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    centroids = x[init_idx]
+    for _ in range(iters):
+        centroids, shift = _lloyd_step(x, centroids)
+        if float(shift) < tol:
+            break
+    return centroids, _assign(x, centroids)
+
+
+def train_pq_codebooks(key: jax.Array, x: jax.Array, n_subq: int,
+                       n_codes: int = 256, iters: int = 15) -> jax.Array:
+    """Product-quantization codebooks.  x: (N, D) with D % n_subq == 0.
+
+    Returns (n_subq, n_codes, D // n_subq).
+    """
+    n, d = x.shape
+    assert d % n_subq == 0, (d, n_subq)
+    dsub = d // n_subq
+    keys = jax.random.split(key, n_subq)
+    books = []
+    for s in range(n_subq):
+        sub = x[:, s * dsub:(s + 1) * dsub]
+        c, _ = kmeans(keys[s], sub, min(n_codes, n), iters=iters)
+        if c.shape[0] < n_codes:   # tiny corpora: pad codebook
+            c = jnp.concatenate(
+                [c, jnp.zeros((n_codes - c.shape[0], dsub), c.dtype)])
+        books.append(c)
+    return jnp.stack(books)
+
+
+def pq_encode(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """x: (N, D); codebooks: (S, 256, dsub) -> uint8 codes (N, S)."""
+    s, n_codes, dsub = codebooks.shape
+    xs = x.reshape(x.shape[0], s, dsub)
+    codes = []
+    for i in range(s):
+        codes.append(_assign(xs[:, i], codebooks[i]))
+    return jnp.stack(codes, axis=1).astype(jnp.uint8)
+
+
+def pq_decode(codes: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """codes: (N, S) uint8 -> reconstructed (N, S*dsub)."""
+    s = codebooks.shape[0]
+    parts = [jnp.take(codebooks[i], codes[:, i].astype(jnp.int32), axis=0)
+             for i in range(s)]
+    return jnp.concatenate(parts, axis=-1)

@@ -1,0 +1,274 @@
+"""RAG serving engine: executes a RAGSchema pipeline end-to-end on real JAX
+models + the JAX retrieval engine.
+
+Pipeline per request (stages optional per schema, mirroring Fig. 3):
+
+  [rewrite] -> embed query -> retrieve (IVF-PQ or exact) -> [rerank]
+  -> prefill (question + docs) -> continuous-batched decode
+  [-> iterative retrieval during decode (§5.3): sequences stall until the
+      iterative retrieval batch fills, then new context is appended]
+
+The decode loop is slot-based (fixed shapes for XLA) with Orca-style
+continuous batching: finished sequences free their slot and queued requests
+are admitted with a fresh prefill.  Prompt lengths are bucketed to powers of
+two to bound recompilation.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tr
+from repro.retrieval.exact import knn
+from repro.serving.kv_cache import KVCachePool
+from repro.serving.request import Request, State
+
+
+@dataclass
+class EngineConfig:
+    decode_slots: int = 4
+    s_max: int = 256
+    retrieval_k: int = 2
+    max_new_tokens: int = 16
+    iterative_interval: int | None = None  # tokens between retrievals
+    retrieval_batch: int = 1               # iterative batch size (§5.3)
+    rewrite_tokens: int = 0                # >0 enables the rewriter stage
+    rerank: bool = False
+    rerank_candidates: int = 8
+    eos_token: int | None = None
+
+
+@dataclass
+class Component:
+    cfg: tr.TransformerConfig
+    params: dict
+
+
+class RAGEngine:
+    def __init__(self, generative: Component, encoder: Component,
+                 corpus_tokens: np.ndarray, cfg: EngineConfig,
+                 rewriter: Component | None = None,
+                 reranker: Component | None = None):
+        """corpus_tokens: (n_docs, doc_len) int32 database passages."""
+        self.gen = generative
+        self.enc = encoder
+        self.rewriter = rewriter
+        self.reranker = reranker
+        self.cfg = cfg
+        self.corpus = np.asarray(corpus_tokens)
+        self.pool = KVCachePool(generative.cfg, cfg.decode_slots, cfg.s_max)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.pending_retrievals: list[Request] = []
+        self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
+                        "retrieval_batches": 0, "prefills": 0}
+        self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
+        self._prefill_jit = {}
+        # database embeddings (the paper's offline encode step)
+        self.db_vectors = np.asarray(self._embed_batched(self.corpus))
+
+    # ---------------- components -----------------------------------------
+
+    def _embed_batched(self, tokens: np.ndarray, bs: int = 32) -> jnp.ndarray:
+        outs = []
+        for i in range(0, tokens.shape[0], bs):
+            chunk = jnp.asarray(tokens[i:i + bs])
+            h = tr.encode(self.enc.params, chunk, self.enc.cfg)
+            outs.append(h)
+        return jnp.concatenate(outs)
+
+    def _embed_one(self, tokens: np.ndarray) -> jnp.ndarray:
+        return tr.encode(self.enc.params, jnp.asarray(tokens)[None],
+                         self.enc.cfg)[0]
+
+    def _retrieve(self, queries: np.ndarray, k: int) -> np.ndarray:
+        """queries: (B, T) -> (B, k) doc indices."""
+        qv = self._embed_batched(queries)
+        _, idx = knn(qv, jnp.asarray(self.db_vectors), k=k, metric="cosine")
+        return np.asarray(idx)
+
+    def _rerank(self, question: np.ndarray, cand_ids: np.ndarray,
+                k: int) -> np.ndarray:
+        """Score candidates with the reranker encoder; return top-k ids."""
+        qv = tr.encode(self.reranker.params, jnp.asarray(question)[None],
+                       self.reranker.cfg)[0]
+        docs = jnp.asarray(self.corpus[cand_ids])
+        dv = tr.encode(self.reranker.params, docs, self.reranker.cfg)
+        scores = dv @ qv
+        order = np.asarray(jnp.argsort(-scores))[:k]
+        return cand_ids[order]
+
+    def _generate_greedy(self, comp: Component, prompt: np.ndarray,
+                         n_tokens: int) -> np.ndarray:
+        """Small greedy generation loop (query rewriter stage)."""
+        cache_len = int(2 ** np.ceil(np.log2(prompt.shape[0] + n_tokens + 1)))
+        logits, cache = tr.prefill(comp.params, jnp.asarray(prompt)[None],
+                                   comp.cfg, cache_len=cache_len)
+        toks = []
+        pos = prompt.shape[0]
+        tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
+        for _ in range(n_tokens):
+            toks.append(int(tok))
+            logits, cache = tr.decode_step(
+                comp.params, cache, tok[None].astype(jnp.int32),
+                jnp.asarray([pos], jnp.int32), comp.cfg)
+            tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
+            pos += 1
+        return np.asarray(toks, np.int32)
+
+    # ---------------- pipeline stages -------------------------------------
+
+    def _build_prompt(self, req: Request) -> np.ndarray:
+        q = req.rewritten if req.rewritten is not None else req.question
+        k = self.cfg.retrieval_k
+        if self.reranker is not None and self.cfg.rerank:
+            cand = self._retrieve(q[None], self.cfg.rerank_candidates)[0]
+            ids = self._rerank(q, cand, k)
+        else:
+            ids = self._retrieve(q[None], k)[0]
+        req.retrieved_ids.append(list(map(int, ids)))
+        docs = self.corpus[ids].reshape(-1)
+        prompt = np.concatenate([docs, q])
+        max_prompt = self.cfg.s_max - self.cfg.max_new_tokens - 1
+        return prompt[-max_prompt:].astype(np.int32)
+
+    def _prefill(self, req: Request, slot: int) -> None:
+        prompt = req.prompt
+        bucket = int(2 ** np.ceil(np.log2(max(len(prompt), 8))))
+        padded = np.zeros(bucket, np.int32)
+        padded[:len(prompt)] = prompt
+        if bucket not in self._prefill_jit:
+            self._prefill_jit[bucket] = jax.jit(
+                partial(tr.prefill, cfg=self.gen.cfg))
+        # note: padding tokens at the tail would pollute the cache; prefill
+        # exactly the prompt length via the unpadded path when short
+        logits, cache = tr.prefill(self.gen.params,
+                                   jnp.asarray(prompt)[None], self.gen.cfg)
+        self.pool.write_prefix(slot, cache, len(prompt))
+        tok = int(jnp.argmax(logits[0][:self.gen.cfg.vocab_size]))
+        req.output.append(tok)
+        req.t_first_token = time.monotonic()
+        req.state = State.DECODE
+        req.slot = slot
+        self.metrics["prefills"] += 1
+
+    def _admit(self) -> None:
+        while self.queue and self.pool.free:
+            req = self.queue.pop(0)
+            if self.cfg.rewrite_tokens and self.rewriter is not None:
+                req.state = State.REWRITING
+                extra = self._generate_greedy(self.rewriter, req.question,
+                                              self.cfg.rewrite_tokens)
+                req.rewritten = np.concatenate([req.question, extra])
+            req.state = State.RETRIEVING
+            req.prompt = self._build_prompt(req)
+            slot = self.pool.alloc(req.rid)
+            self._prefill(req, slot)
+            self.active[req.slot] = req
+
+    def _append_tokens(self, slot: int, tokens: np.ndarray) -> None:
+        """Append retrieved content into a slot's cache (iteration prefill).
+
+        Correct-and-simple chunked append: feed tokens one step at a time
+        through the decode path (logits discarded)."""
+        for t in tokens:
+            token_vec = np.zeros(self.pool.n_slots, np.int32)
+            token_vec[slot] = int(t)
+            logits, cache = self._decode_jit(
+                self.gen.params, self.pool.cache,
+                jnp.asarray(token_vec), self.pool.positions())
+            # only this slot's cache row advanced meaningfully; other slots
+            # wrote at their current pos and will overwrite on next step
+            self.pool.cache = jax.tree_util.tree_map(
+                lambda new, old: old.at[:, slot].set(new[:, slot]),
+                cache, self.pool.cache)
+            self.pool.lengths[slot] += 1
+
+    def _dispatch_iterative(self, force: bool = False) -> None:
+        r = self.cfg.retrieval_batch
+        while (len(self.pending_retrievals) >= r
+               or (force and self.pending_retrievals)):
+            batch = self.pending_retrievals[:r]
+            self.pending_retrievals = self.pending_retrievals[r:]
+            qs = np.stack([np.asarray(req.output[-8:], np.int32)
+                           if len(req.output) >= 8 else req.question
+                           for req in batch])
+            ids = self._retrieve(qs, 1)
+            self.metrics["retrieval_batches"] += 1
+            for req, docs in zip(batch, ids):
+                req.retrieved_ids.append(list(map(int, docs)))
+                req.retrievals_done += 1
+                new_ctx = self.corpus[docs[0]]
+                room = self.pool.s_max - self.pool.lengths[req.slot] - 2
+                if room > 0:
+                    self._append_tokens(req.slot, new_ctx[:room])
+                req.state = State.DECODE
+
+    def _decode_step(self) -> None:
+        token_vec = np.zeros(self.pool.n_slots, np.int32)
+        stepping = []
+        for slot, req in self.active.items():
+            if req.state is State.DECODE:
+                token_vec[slot] = req.output[-1]
+                stepping.append(slot)
+        self.metrics["decode_steps"] += 1
+        self.metrics["idle_slot_steps"] += self.pool.n_slots - len(stepping)
+        if not stepping:
+            return
+        logits, cache = self._decode_jit(
+            self.gen.params, self.pool.cache, jnp.asarray(token_vec),
+            self.pool.positions())
+        new_tokens = np.asarray(
+            jnp.argmax(logits[:, :self.gen.cfg.vocab_size], axis=-1))
+        # keep cache rows only for slots that actually decoded
+        self.pool.cache = jax.tree_util.tree_map(
+            lambda new, old: old.at[:, np.asarray(stepping)].set(
+                new[:, np.asarray(stepping)]),
+            cache, self.pool.cache)
+        self.pool.advance(stepping)
+        done_slots = []
+        for slot in stepping:
+            req = self.active[slot]
+            tok = int(new_tokens[slot])
+            req.output.append(tok)
+            n_out = len(req.output)
+            it = self.cfg.iterative_interval
+            if (it and n_out % it == 0
+                    and n_out < req.max_new_tokens
+                    and req.state is State.DECODE):
+                req.state = State.WAIT_RETRIEVAL
+                self.pending_retrievals.append(req)
+            if (n_out >= req.max_new_tokens
+                    or (self.cfg.eos_token is not None
+                        and tok == self.cfg.eos_token)):
+                req.state = State.DONE
+                req.t_done = time.monotonic()
+                done_slots.append(slot)
+        for slot in done_slots:
+            self.active.pop(slot)
+            self.pool.release(slot)
+
+    # ---------------- public API ------------------------------------------
+
+    def serve(self, requests: list[Request],
+              max_steps: int = 10000) -> list[Request]:
+        for r in requests:
+            r.t_arrive = time.monotonic()
+            r.max_new_tokens = min(r.max_new_tokens, self.cfg.max_new_tokens)
+            self.queue.append(r)
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self._admit()
+            self._dispatch_iterative(
+                force=not any(r.state is State.DECODE
+                              for r in self.active.values()))
+            self._decode_step()
+            steps += 1
+        self._dispatch_iterative(force=True)
+        return requests

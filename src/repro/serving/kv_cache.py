@@ -1,0 +1,57 @@
+"""Slot-based KV cache pool for continuous batching.
+
+XLA needs static shapes, so the decode batch is a fixed pool of ``n_slots``
+sequences; per-slot lengths track validity and freed slots are recycled
+(Orca-style continuous batching at slot granularity).  The cache layout
+matches ``transformer.make_cache``: (L, B=n_slots, S_max, H_kv, D).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tr
+
+
+class KVCachePool:
+    def __init__(self, cfg: tr.TransformerConfig, n_slots: int, s_max: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.cache = tr.make_cache(cfg, n_slots, s_max, dtype)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.free = list(range(n_slots))
+        self.owner: dict[int, int] = {}       # slot -> request id
+
+    def alloc(self, rid: int) -> int | None:
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.owner[slot] = rid
+        self.lengths[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        self.owner.pop(slot, None)
+        self.lengths[slot] = 0
+        # zero the slot so stale keys can never leak across requests
+        self.cache = {
+            k: v.at[:, slot].set(0) for k, v in self.cache.items()}
+        self.free.append(slot)
+
+    def write_prefix(self, slot: int, layer_cache: dict, prefix_len: int):
+        """Install a prefill-produced cache (L, 1, P, H, D) into the slot."""
+        p = min(prefix_len, self.s_max)
+        self.cache = {
+            k: self.cache[k].at[:, slot, :p].set(v[:, 0, :p])
+            for k, v in layer_cache.items()}
+        self.lengths[slot] = p
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray(self.lengths)
+
+    def advance(self, slots: list[int]) -> None:
+        for s in slots:
+            self.lengths[s] += 1

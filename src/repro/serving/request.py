@@ -1,0 +1,51 @@
+"""Request lifecycle for the RAG serving engine."""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    REWRITING = "rewriting"
+    RETRIEVING = "retrieving"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    WAIT_RETRIEVAL = "wait_retrieval"   # iterative retrieval stall (§5.3)
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    question: np.ndarray                  # (q_len,) int32 token ids
+    max_new_tokens: int = 32
+    rid: int = field(default_factory=lambda: next(_ids))
+    state: State = State.QUEUED
+    rewritten: np.ndarray | None = None
+    retrieved_ids: list = field(default_factory=list)
+    prompt: np.ndarray | None = None      # question + retrieved content
+    output: list = field(default_factory=list)
+    slot: int | None = None               # decode batch slot
+    retrievals_done: int = 0
+    # timestamps (engine clock, seconds)
+    t_arrive: float = 0.0
+    t_first_token: float | None = None
+    t_done: float | None = None
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_arrive
+
+    @property
+    def latency(self) -> float | None:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_arrive

@@ -1,0 +1,113 @@
+"""Elastic scaling + straggler mitigation scaffolding.
+
+On a real multi-pod deployment these hook into the cluster manager; here the
+policies are implemented against an abstract device set so they are testable
+on CPU and drop in unchanged at scale:
+
+* ``ElasticMesh`` -- rebuilds the largest valid (data, model) mesh from the
+  currently healthy device set and reshards a state pytree onto it
+  (checkpoint-free elastic down/up-scaling as long as the model axis
+  survives; data-parallel membership changes only rescale gradient
+  averaging).
+* ``StragglerMonitor`` -- per-step host timing with MAD-based outlier
+  detection; the launcher consults ``should_evict`` to drop persistent
+  stragglers (which then flows into ElasticMesh as a failure).
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def largest_pow2_leq(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
+def plan_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid from ``n_devices`` healthy devices.
+
+    The model axis is pinned (weights are sharded that way); data axis
+    shrinks to the largest multiple that fits -- leftover devices idle until
+    the next resize window.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model_parallel={model_parallel} with "
+            f"{n_devices} devices")
+    data = largest_pow2_leq(n_devices // model_parallel)
+    return data, model_parallel
+
+
+class ElasticMesh:
+    def __init__(self, devices=None, model_parallel: int = 1):
+        self.all_devices = list(devices if devices is not None
+                                else jax.devices())
+        self.healthy = list(self.all_devices)
+        self.model_parallel = model_parallel
+        self.mesh = self._build()
+
+    def _build(self) -> Mesh:
+        data, model = plan_mesh_shape(len(self.healthy), self.model_parallel)
+        devs = np.array(self.healthy[:data * model]).reshape(data, model)
+        return Mesh(devs, ("data", "model"))
+
+    def fail(self, device) -> Mesh:
+        """Mark a device unhealthy and rebuild the mesh."""
+        self.healthy = [d for d in self.healthy if d != device]
+        self.mesh = self._build()
+        return self.mesh
+
+    def join(self, device) -> Mesh:
+        if device not in self.healthy:
+            self.healthy.append(device)
+        self.mesh = self._build()
+        return self.mesh
+
+    def reshard(self, tree, spec_tree):
+        """Move a state pytree onto the current mesh."""
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            tree, spec_tree)
+
+
+@dataclass
+class StragglerMonitor:
+    """MAD outlier detection over per-host step times."""
+    threshold: float = 4.0          # multiples of MAD
+    patience: int = 3               # consecutive flags before eviction
+    history: dict = field(default_factory=dict)
+    flags: dict = field(default_factory=dict)
+
+    def record(self, host: str, step_time: float) -> None:
+        self.history.setdefault(host, []).append(step_time)
+        self.history[host] = self.history[host][-32:]
+
+    def _latest(self) -> dict:
+        return {h: t[-1] for h, t in self.history.items() if t}
+
+    def stragglers(self) -> list[str]:
+        latest = self._latest()
+        if len(latest) < 3:
+            return []
+        vals = list(latest.values())
+        med = statistics.median(vals)
+        mad = statistics.median([abs(v - med) for v in vals]) or 1e-9
+        out = []
+        for h, v in latest.items():
+            if (v - med) / mad > self.threshold:
+                self.flags[h] = self.flags.get(h, 0) + 1
+                out.append(h)
+            else:
+                self.flags[h] = 0
+        return out
+
+    def should_evict(self) -> list[str]:
+        self.stragglers()
+        return [h for h, c in self.flags.items() if c >= self.patience]

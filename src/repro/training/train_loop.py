@@ -1,0 +1,82 @@
+"""Training loop with checkpoint/restart, async saves and straggler hooks."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+from repro.training import checkpoint as ckpt
+from repro.training.elastic import StragglerMonitor
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig = AdamWConfig()):
+    """loss_fn(params, batch) -> scalar.  Returns jitted step fn."""
+
+    @jax.jit
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_p, new_opt, gnorm = adamw_update(grads, state["opt"],
+                                             state["params"], opt_cfg)
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss, "grad_norm": gnorm})
+
+    return step
+
+
+def init_state(params) -> dict:
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def train(state: dict, batches: Iterable, loss_fn: Callable,
+          cfg: TrainConfig = TrainConfig(),
+          opt_cfg: AdamWConfig = AdamWConfig(),
+          on_step=None) -> tuple[dict, list[dict]]:
+    """Runs up to cfg.steps; resumes from the latest committed checkpoint if
+    ckpt_dir holds one (fault-tolerant restart)."""
+    step_fn = make_train_step(loss_fn, opt_cfg)
+    start = 0
+    writer = None
+    if cfg.ckpt_dir:
+        writer = ckpt.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        latest = ckpt.latest_step(cfg.ckpt_dir)
+        if latest is not None:
+            state, start = ckpt.restore(cfg.ckpt_dir, state)
+    monitor = StragglerMonitor()
+    history = []
+    it = iter(batches)
+    for step_idx in range(start, cfg.steps):
+        try:
+            batch = next(it)
+        except StopIteration:
+            break
+        t0 = time.monotonic()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.monotonic() - t0
+        monitor.record("host0", dt)
+        rec = {"step": step_idx + 1, "loss": loss, "time": dt,
+               "grad_norm": float(metrics["grad_norm"])}
+        history.append(rec)
+        if on_step:
+            on_step(rec)
+        if cfg.ckpt_dir and (step_idx + 1) % cfg.ckpt_every == 0:
+            writer.save(step_idx + 1, state)
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"loss diverged at step {step_idx+1}")
+    if writer:
+        writer.wait()
+    return state, history

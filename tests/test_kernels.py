@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pq_scan.ops import pq_scan
+from repro.kernels.pq_scan.ref import pq_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# PQ ADC scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n,s", [(1, 16, 4), (3, 100, 8), (2, 513, 16),
+                                   (1, 2048, 8)])
+def test_pq_scan_shapes(b, n, s):
+    lut = jax.random.normal(jax.random.PRNGKey(0), (b, s, 256))
+    codes = jax.random.randint(jax.random.PRNGKey(1), (b, n, s), 0,
+                               256).astype(jnp.uint8)
+    np.testing.assert_allclose(np.asarray(pq_scan(lut, codes)),
+                               np.asarray(pq_scan_ref(lut, codes)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pq_scan_dtypes(dtype):
+    lut = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 256)).astype(dtype)
+    codes = jax.random.randint(jax.random.PRNGKey(1), (2, 64, 8), 0,
+                               256).astype(jnp.uint8)
+    out = pq_scan(lut, codes)
+    ref = pq_scan_ref(lut.astype(jnp.float32), codes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_pq_scan_matches_ivfpq_distance_semantics():
+    """Kernel distances must equal full ADC reconstruction distances."""
+    from repro.retrieval import kmeans as km
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 32))
+    books = km.train_pq_codebooks(jax.random.PRNGKey(1), x, 8, iters=4)
+    codes = km.pq_encode(x, books)
+    q = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    qs = q.reshape(8, 4)
+    lut = jnp.sum((qs[:, None, :] - books) ** 2, -1)[None]   # (1, 8, 256)
+    d_kernel = pq_scan(lut, codes[None])[0]
+    recon = km.pq_decode(codes, books)
+    d_true = jnp.sum((recon - q) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(d_kernel), np.asarray(d_true),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+def _mha_ref(q, k, v, causal):
+    b, s, h, d = q.shape
+    rep = h // k.shape[2]
+    kr = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vr = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = attention_ref(qr, kr, vr, causal)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("s,h,hkv,d,causal", [
+    (64, 4, 4, 32, True), (100, 4, 2, 16, True), (128, 8, 1, 64, True),
+    (96, 2, 2, 32, False), (257, 4, 4, 32, True)])
+def test_flash_attention_sweep(s, h, hkv, d, causal):
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, hkv, d))
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = _mha_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 2, 32),
+                          jnp.bfloat16)
+    out = flash_attention(q, q, q, block_q=32, block_k=32)
+    ref = _mha_ref(q.astype(jnp.float32), q.astype(jnp.float32),
+                   q.astype(jnp.float32), True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Decode (split-K) attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,d,block", [
+    (2, 128, 4, 4, 32, 32), (3, 200, 8, 2, 16, 64), (1, 1024, 4, 1, 64, 256),
+    (4, 96, 2, 2, 32, 32)])
+def test_decode_attention_sweep(b, s, h, hkv, d, block):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    lens = jax.random.randint(jax.random.PRNGKey(3), (b,), 1, s + 1)
+    out = decode_attention(q, kc, vc, lens, block_k=block)
+    rep = h // hkv
+    ref = decode_attention_ref(q, jnp.repeat(kc, rep, 2),
+                               jnp.repeat(vc, rep, 2), lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_length_masking():
+    """Changing cache content beyond cache_len must not affect output."""
+    b, s, h, d = 2, 64, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    lens = jnp.array([10, 32], jnp.int32)
+    out1 = decode_attention(q, kc, vc, lens, block_k=32)
+    kc2 = kc.at[:, 40:].set(99.0)
+    vc2 = vc.at[:, 40:].set(-99.0)
+    out2 = decode_attention(q, kc2, vc2, lens, block_k=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants (models + embeddings +
+sharding helpers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.models import gnn
+from repro.models.embedding import StackedTables, embedding_bag
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.integers(1, 40), v=hst.integers(2, 50), d=hst.integers(1, 8),
+       seed=hst.integers(0, 100))
+def test_embedding_bag_sum_equals_onehot_matmul(n, v, d, seed):
+    key = jax.random.PRNGKey(seed)
+    table = jax.random.normal(key, (v, d))
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, v)
+    seg = jnp.sort(jax.random.randint(jax.random.PRNGKey(seed + 2), (n,),
+                                      0, 4))
+    bag = embedding_bag(table, ids, seg, 4, mode="sum")
+    onehot = jax.nn.one_hot(ids, v)
+    seg_onehot = jax.nn.one_hot(seg, 4)
+    ref = seg_onehot.T @ (onehot @ table)
+    np.testing.assert_allclose(np.asarray(bag), np.asarray(ref), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=hst.integers(0, 50))
+def test_pna_permutation_invariance(seed):
+    """Permuting edge order must not change PNA output."""
+    cfg = gnn.PNAConfig(name="h", n_layers=2, d_hidden=8, d_feat=6,
+                        n_classes=3)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (12, 6))
+    edges = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 30), 0, 12)
+    out1 = gnn.forward(params, x, edges, cfg)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 2), 30)
+    out2 = gnn.forward(params, x, edges[:, perm], cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=hst.integers(0, 50))
+def test_pna_isolated_nodes_stable(seed):
+    """Zero-degree nodes must produce finite outputs (no div-by-zero)."""
+    cfg = gnn.PNAConfig(name="h", n_layers=2, d_hidden=8, d_feat=4,
+                        n_classes=2)
+    params = gnn.init_params(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (10, 4))
+    # all edges point at node 0: nodes 1..9 have degree 0
+    edges = jnp.stack([jnp.arange(10), jnp.zeros(10, jnp.int32)])
+    out = gnn.forward(params, x, edges, cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(vs=hst.lists(hst.integers(1, 100), min_size=1, max_size=6),
+       d=hst.integers(1, 8))
+def test_stacked_tables_layout(vs, d):
+    t = StackedTables(tuple(vs), d)
+    assert t.total_rows % 512 == 0
+    assert t.total_rows >= sum(vs)
+    table = jnp.arange(t.total_rows * d, dtype=jnp.float32).reshape(-1, d)
+    ids = jnp.zeros((2, len(vs)), jnp.int32)   # first row of each field
+    out = t.lookup(table, ids)
+    for f in range(len(vs)):
+        np.testing.assert_array_equal(np.asarray(out[0, f]),
+                                      np.asarray(table[t.offsets[f]]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=hst.integers(1, 10_000_000))
+def test_divisible_axes_invariant(n):
+    import math
+    from repro.distributed.sharding import divisible_axes
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()    # (1, 1): always divides
+    ax = divisible_axes(n, ("data", "model"), mesh)
+    assert ax == ("data", "model")
+
+
+def test_divisible_axes_fallback_production():
+    """Check fallback logic against the production mesh shape arithmetic."""
+    from repro.distributed.sharding import divisible_axes
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    m = FakeMesh()
+    assert divisible_axes(512, ("pod", "data", "model"), m) == \
+        ("pod", "data", "model")
+    assert divisible_axes(1_000_000, ("pod", "data", "model"), m) == \
+        ("pod", "data")            # 1e6 % 512 != 0, % 32 == 0
+    assert divisible_axes(49155, ("data", "model"), m) is None  # odd
+    assert divisible_axes(1, ("pod",), m) is None

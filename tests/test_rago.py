@@ -1,0 +1,198 @@
+"""RAGO core tests: cost model, Pareto invariants, optimizer behaviour,
+iterative-decode simulation anchors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import cost_model as cmod
+from repro.core import optimizer as opt
+from repro.core import stages as st
+from repro.core.hardware import EPYC_MILAN, SystemConfig, XPU_A, XPU_C
+from repro.core.pareto import combine_collocated, combine_serial, pareto
+from repro.core.pipeline_sim import simulate_iterative_decode
+from repro.core.ragschema import (LLAMA3_8B, LLAMA3_70B, case_I, case_II,
+                                  case_IV, llm_only)
+from repro.core.retrieval_model import (min_servers_for_db, query_bytes,
+                                        retrieval_perf)
+
+SYS = SystemConfig(n_servers=32, xpu=XPU_C)
+
+
+# ---------------------------------------------------------------------------
+# Pareto invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(hst.lists(hst.tuples(hst.floats(0.001, 100), hst.floats(0.001, 100)),
+                 min_size=1, max_size=40))
+def test_pareto_is_nondominated_subset(pts):
+    pts = [(l, t, None) for l, t in pts]
+    front = pareto(pts)
+    # subset
+    assert all(p in pts for p in front)
+    # non-dominated within the frontier (strictly increasing tput with lat)
+    for a, b in zip(front, front[1:]):
+        assert a[0] <= b[0] and a[1] < b[1]
+    # contains the min-latency point's latency and ~max-throughput
+    assert min(front, key=lambda p: p[0])[0] == min(p[0] for p in pts)
+    assert max(p[1] for p in front) >= max(p[1] for p in pts) / 1.002
+
+
+@settings(max_examples=20, deadline=None)
+@given(hst.lists(hst.tuples(hst.floats(0.01, 10), hst.floats(0.01, 10)),
+                 min_size=1, max_size=10),
+       hst.lists(hst.tuples(hst.floats(0.01, 10), hst.floats(0.01, 10)),
+                 min_size=1, max_size=10))
+def test_serial_composition_bounds(a, b):
+    fa = pareto([(l, t, None) for l, t in a])
+    fb = pareto([(l, t, None) for l, t in b])
+    comb = combine_serial(fa, fb)
+    for lat, tput, _ in comb:
+        assert lat >= max(min(p[0] for p in fa), min(p[0] for p in fb))
+        assert tput <= min(max(p[1] for p in fa), max(p[1] for p in fb))
+    coll = combine_collocated(fa, fb)
+    for lat, tput, _ in coll:
+        # time multiplexing is never faster than the slower member alone
+        assert tput <= min(max(p[1] for p in fa), max(p[1] for p in fb))
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_prefill_throughput_monotonic_in_chips():
+    t = [cmod.prefill_perf(LLAMA3_8B, XPU_C, n, 8, 512).throughput
+         for n in (1, 4, 16, 64)]
+    assert all(b >= a * 0.99 for a, b in zip(t, t[1:]))
+
+
+def test_prefill_latency_decreases_with_tp():
+    pts1 = cmod.prefill_points(LLAMA3_8B, XPU_C, 1, 1, 512)
+    pts64 = cmod.prefill_points(LLAMA3_8B, XPU_C, 64, 1, 512)
+    assert min(p.latency for p in pts64) < min(p.latency for p in pts1)
+
+
+def test_decode_tpot_scales_with_model():
+    t8 = cmod.decode_tpot(LLAMA3_8B, XPU_C, 16, 64, 640)
+    t70 = cmod.decode_tpot(LLAMA3_70B, XPU_C, 16, 64, 640)
+    assert t70 > 2 * t8
+
+
+def test_decode_memory_constraint():
+    # 70B + huge KV cannot fit one chip
+    assert not cmod.decode_memory_ok(LLAMA3_70B, XPU_A, 1, 1024, 768)
+    assert cmod.decode_memory_ok(LLAMA3_8B, XPU_C, 16, 64, 768)
+
+
+def test_xpu_generations_order():
+    """Better XPU => higher throughput (paper Fig. 7a premise)."""
+    a = cmod.prefill_perf(LLAMA3_8B, XPU_A, 16, 32, 512).throughput
+    c = cmod.prefill_perf(LLAMA3_8B, XPU_C, 16, 32, 512).throughput
+    assert c > a
+
+
+# ---------------------------------------------------------------------------
+# Retrieval model
+# ---------------------------------------------------------------------------
+
+def test_query_bytes_matches_paper_scale():
+    """64B vectors x 96B x 0.1% ~= 6.1GB per query (paper §3.3)."""
+    qb = query_bytes(case_I("8B"))
+    assert 5.9e9 < qb < 6.5e9
+
+
+def test_retrieval_latency_flat_then_linear():
+    """Paper Fig. 19a: below ~16 queries latency does not improve."""
+    s = case_I("8B")
+    lats = [retrieval_perf(s, EPYC_MILAN, 32, b).latency
+            for b in (1, 2, 4, 8, 16, 64, 256)]
+    assert abs(lats[0] - lats[2]) / lats[0] < 0.05     # flat region
+    assert lats[-1] > lats[0] * 4                      # linear region
+
+
+def test_min_servers_for_db():
+    assert min_servers_for_db(case_I("8B"), EPYC_MILAN) >= 16
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def c2_plans():
+    return opt.enumerate_plans(case_II("70B", 1_000_000), SYS)
+
+
+def test_partitions_count():
+    assert len(opt.consecutive_partitions([1, 2, 3])) == 4
+    assert len(opt.consecutive_partitions(list(range(4)))) == 8
+
+
+def test_rago_beats_or_matches_baseline_c2(c2_plans):
+    base = opt.baseline_plans(case_II("70B", 1_000_000), SYS)
+    rb = opt.best_qps_per_chip(c2_plans)
+    bb = opt.best_qps_per_chip(base)
+    gain = rb.qps_per_chip / bb.qps_per_chip
+    assert gain >= 1.3, gain      # paper: 1.7x
+
+
+def test_rago_frontier_sorted_and_valid(c2_plans):
+    assert all(a.ttft <= b.ttft for a, b in zip(c2_plans, c2_plans[1:]))
+    for p in c2_plans:
+        assert p.total_chips <= SYS.n_xpus
+        assert p.qps > 0 and p.ttft > 0
+
+
+def test_encode_heavy_allocation(c2_plans):
+    """C-II: the best-QPS plan gives the encoder the largest share
+    (paper Table 4: 64 of 96 XPUs on encode)."""
+    b = opt.best_qps_per_chip(c2_plans)
+    stages = {s["stage"]: s for s in b.detail["stages"]}
+    enc = stages["encode"]["chips"]
+    assert enc >= stages["prefill"]["chips"]
+    assert enc >= b.detail["decode_chips"]
+
+
+def test_rewriter_increases_ttft():
+    """Paper Fig. 11: autoregressive rewriter inflates TTFT (~2.4x)."""
+    base = opt.best_ttft(opt.enumerate_plans(case_I("70B"), SYS))
+    rw = opt.best_ttft(opt.enumerate_plans(case_IV("70B"), SYS))
+    assert rw.ttft > 1.5 * base.ttft
+
+
+def test_llm_only_has_no_retrieval_stage():
+    plans = opt.enumerate_plans(llm_only("8B"), SYS)
+    stages = {s["stage"] for p in plans for s in p.detail["stages"]}
+    assert "retrieval" not in stages
+
+
+# ---------------------------------------------------------------------------
+# Iterative-retrieval simulation (§5.3)
+# ---------------------------------------------------------------------------
+
+def test_sim_anchor_paper_fig10():
+    r = simulate_iterative_decode(64, 16, 4, n_steps=4096)
+    assert abs(r["normalized_decode_latency"] - 1.14) < 0.08  # paper 1.14x
+    r2 = simulate_iterative_decode(64, 64, 4, n_steps=4096)
+    assert r2["normalized_decode_latency"] > 2.0              # paper 2.77x
+
+
+def test_sim_no_stall_without_batching():
+    r = simulate_iterative_decode(32, 1, 2, n_steps=2048)
+    assert r["normalized_decode_latency"] < 1.05
+
+
+@settings(max_examples=8, deadline=None)
+@given(b_d=hst.sampled_from([8, 32]), b_r=hst.sampled_from([1, 4, 8]),
+       freq=hst.sampled_from([1, 2, 4]))
+def test_sim_latency_at_least_one(b_d, b_r, freq):
+    r = simulate_iterative_decode(b_d, b_r, freq, n_steps=1024)
+    assert r["normalized_decode_latency"] >= 0.999
+    assert 0 < r["utilization"] <= 1.0
+
+
+def test_sim_latency_monotonic_in_retrieval_batch():
+    vals = [simulate_iterative_decode(64, rb, 4, n_steps=2048)
+            ["normalized_decode_latency"] for rb in (1, 16, 64)]
+    assert vals[0] <= vals[1] <= vals[2]

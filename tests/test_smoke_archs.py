@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests (brief requirement): reduced configs of the
+same family, one forward/train step on CPU, asserting shapes + no NaNs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import gnn, recsys
+from repro.models import transformer as tr
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+
+LM_ARCHS = [a for a in ARCH_IDS
+            if get_arch(a).family == "lm"]
+RECSYS_ARCHS = [a for a in ARCH_IDS if get_arch(a).family == "recsys"]
+
+
+def _train_step(loss_fn, params, batch):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    new_p, _, gnorm = adamw_update(grads, init_opt_state(params), params,
+                                   AdamWConfig())
+    return loss, new_p, gnorm
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_reduced_smoke(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.reduced()
+    # reduced config preserves family traits of the full config
+    full = arch.config
+    assert (cfg.moe is None) == (full.moe is None)
+    assert cfg.ffn_type == full.ffn_type
+    assert cfg.rotary_frac == full.rotary_frac
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+
+    def loss(p, batch):
+        return tr.loss_fn(p, batch[:, :-1], batch[:, 1:], cfg)
+
+    l, new_p, gnorm = _train_step(loss, params, toks)
+    assert np.isfinite(float(l)) and np.isfinite(float(gnorm))
+    logits, _ = tr.forward(new_p, toks, cfg)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    # serve path
+    lg, cache = tr.prefill(params, toks, cfg, cache_len=32)
+    step_lg, cache = tr.decode_step(params, cache, toks[:, 0],
+                                    jnp.full((2,), 16, jnp.int32), cfg)
+    assert step_lg.shape == (2, cfg.padded_vocab)
+    assert not bool(jnp.isnan(step_lg).any())
+
+
+def test_pna_reduced_smoke():
+    arch = get_arch("pna")
+    cfg = arch.reduced()
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (40, cfg.d_feat))
+    edges = jax.random.randint(jax.random.PRNGKey(2), (2, 160), 0, 40)
+    batch = {"x": x, "edges": edges,
+             "labels": jax.random.randint(jax.random.PRNGKey(3), (40,), 0,
+                                          cfg.n_classes)}
+
+    def loss(p, b):
+        return gnn.loss_fn(p, b, cfg)
+
+    l, new_p, gnorm = _train_step(loss, params, batch)
+    assert np.isfinite(float(l))
+    out = gnn.forward(new_p, x, edges, cfg)
+    assert out.shape == (40, cfg.n_classes)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_pna_molecule_graph_level():
+    arch = get_arch("pna")
+    cfg = dataclasses.replace(arch.reduced(), graph_level=True, n_classes=1)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    # 4 graphs x 5 nodes
+    x = jax.random.normal(jax.random.PRNGKey(1), (20, cfg.d_feat))
+    edges = jax.random.randint(jax.random.PRNGKey(2), (2, 40), 0, 20)
+    gids = jnp.repeat(jnp.arange(4), 5)
+    out = gnn.forward(params, x, edges, cfg, graph_ids=gids, n_graphs=4)
+    assert out.shape == (4, 1)
+    assert not bool(jnp.isnan(out).any())
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_reduced_smoke(arch_id):
+    arch = get_arch(arch_id)
+    cfg = arch.reduced()
+    rng = jax.random.PRNGKey(0)
+    B = 8
+    if arch_id == "dlrm-rm2":
+        params = recsys.dlrm_init(rng, cfg)
+        batch = {"dense": jax.random.normal(rng, (B, cfg.n_dense)),
+                 "sparse": jax.random.randint(rng, (B, cfg.n_sparse), 0,
+                                              cfg.vocab_per_field),
+                 "labels": jnp.ones(B)}
+        loss = lambda p, b: recsys.dlrm_loss(p, b, cfg)
+        fwd = recsys.dlrm_forward(params, batch["dense"], batch["sparse"],
+                                  cfg)
+        assert fwd.shape == (B,)
+    elif arch_id == "two-tower-retrieval":
+        params = recsys.two_tower_init(rng, cfg)
+        batch = {"user_ids": jnp.arange(B),
+                 "hist_ids": jnp.ones((B, cfg.hist_len), jnp.int32),
+                 "item_ids": jnp.arange(B)}
+        loss = lambda p, b: recsys.two_tower_loss(p, b, cfg)
+        fwd = recsys.user_tower(params, batch["user_ids"],
+                                batch["hist_ids"], cfg)
+        assert fwd.shape == (B, cfg.tower_mlp[-1])
+    elif arch_id == "xdeepfm":
+        params = recsys.xdeepfm_init(rng, cfg)
+        batch = {"sparse": jax.random.randint(rng, (B, cfg.n_sparse), 0,
+                                              cfg.vocab_per_field),
+                 "labels": jnp.ones(B)}
+        loss = lambda p, b: recsys.xdeepfm_loss(p, b, cfg)
+        fwd = recsys.xdeepfm_forward(params, batch["sparse"], cfg)
+        assert fwd.shape == (B,)
+    else:  # mind
+        params = recsys.mind_init(rng, cfg)
+        batch = {"hist_ids": jnp.ones((B, cfg.hist_len), jnp.int32),
+                 "item_ids": jnp.arange(B)}
+        loss = lambda p, b: recsys.mind_loss(p, b, cfg)
+        fwd = recsys.mind_interests(params, batch["hist_ids"], cfg)
+        assert fwd.shape == (B, cfg.n_interests, cfg.embed_dim)
+    assert not bool(jnp.isnan(jnp.asarray(fwd)).any())
+    l, new_p, gnorm = _train_step(loss, params, batch)
+    assert np.isfinite(float(l)) and np.isfinite(float(gnorm))
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_candidate_scoring(arch_id):
+    """retrieval_cand path: 1 user vs N candidates, no loop."""
+    arch = get_arch(arch_id)
+    cfg = arch.reduced()
+    rng = jax.random.PRNGKey(0)
+    n_cand = 50
+    cand = jnp.arange(n_cand)
+    if arch_id == "dlrm-rm2":
+        p = recsys.dlrm_init(rng, cfg)
+        s = recsys.dlrm_score_candidates(
+            p, jax.random.normal(rng, (1, cfg.n_dense)),
+            jnp.zeros((1, cfg.n_sparse), jnp.int32), cand, cfg)
+        assert s.shape == (n_cand,)
+    elif arch_id == "two-tower-retrieval":
+        p = recsys.two_tower_init(rng, cfg)
+        v, i = recsys.two_tower_score_candidates(
+            p, jnp.zeros(1, jnp.int32), jnp.ones((1, cfg.hist_len),
+                                                 jnp.int32), cand, cfg, 10)
+        assert v.shape == (10,)
+    elif arch_id == "xdeepfm":
+        p = recsys.xdeepfm_init(rng, cfg)
+        s = recsys.xdeepfm_score_candidates(
+            p, jnp.zeros((1, cfg.n_sparse), jnp.int32), cand, cfg)
+        assert s.shape == (n_cand,)
+    else:
+        p = recsys.mind_init(rng, cfg)
+        v, i = recsys.mind_score_candidates(
+            p, jnp.ones((1, cfg.hist_len), jnp.int32), cand, cfg, 10)
+        assert v.shape == (10,)
+
+
+def test_all_cells_enumerable():
+    """The official dry-run table has 35 cells (+5 noted skips)."""
+    from repro.configs import all_cells
+    official = list(all_cells())
+    everything = list(all_cells(include_skipped=True))
+    assert len(official) == 35
+    assert len(everything) == 40
+    skipped = [(a.arch_id, s.name) for a, s in everything
+               if s.skip is not None]
+    assert len(skipped) == 5
+    assert all(name == "long_500k" for _, name in skipped)

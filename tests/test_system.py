@@ -1,0 +1,45 @@
+"""End-to-end system behaviour: RAGO optimizing a schema end-to-end and the
+serving engine executing the same pipeline shape."""
+
+import jax
+import numpy as np
+
+from repro.core import optimizer as opt
+from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.ragschema import case_IV
+from repro.data.synthetic import topical_corpus
+from repro.models import transformer as tr
+from repro.serving.engine import Component, EngineConfig, RAGEngine
+from repro.serving.request import Request, State
+
+
+def test_rago_plan_then_engine_executes_pipeline():
+    """The paper's workflow: RAGSchema -> RAGO schedule; then the executable
+    engine runs the same pipeline stages the schedule names."""
+    schema = case_IV("70B")
+    plans = opt.enumerate_plans(schema, SystemConfig(n_servers=32,
+                                                     xpu=XPU_C))
+    best = opt.best_qps_per_chip(plans)
+    stage_names = {s["stage"] for s in best.detail["stages"]}
+    assert {"rewrite", "rerank", "prefill", "retrieval",
+            "decode"} <= stage_names
+
+    # executable engine with the same pipeline shape (tiny models)
+    def comp(seed, causal=True, d=48):
+        cfg = tr.TransformerConfig(name=f"s{seed}", n_layers=2, d_model=d,
+                                   n_heads=4, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab_size=128, causal=causal)
+        return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+    corpus, topics, make_q = topical_corpus(32, 10, 128, n_topics=4)
+    engine = RAGEngine(comp(0), comp(1, causal=False, d=32), corpus,
+                       EngineConfig(decode_slots=2, s_max=96,
+                                    max_new_tokens=4, rewrite_tokens=2,
+                                    rerank=True, retrieval_k=2),
+                       rewriter=comp(2), reranker=comp(3, causal=False,
+                                                       d=32))
+    reqs = [Request(question=make_q(t)) for t in range(3)]
+    done = engine.serve(reqs)
+    assert all(r.state is State.DONE for r in done)
+    assert all(r.rewritten is not None for r in done)
+    assert all(len(r.output) == 4 for r in done)
