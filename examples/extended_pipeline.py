@@ -1,0 +1,34 @@
+"""Registry-extended RAG pipelines: stages the paper never enumerated
+(multi-query fan-out, encoder safety filter) become searchable and
+executable purely through StageSpec registry entries.
+
+Run:  PYTHONPATH=src python examples/extended_pipeline.py
+"""
+
+from repro.configs.rag_pipelines import PRESETS
+from repro.core import optimizer as opt
+from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.stage_registry import REGISTRY
+
+
+def main():
+    system = SystemConfig(n_servers=4, xpu=XPU_C)   # small 16-XPU slice
+
+    print("registered stages:",
+          [f"{s.name}({s.placement})" for s in REGISTRY.ordered()])
+
+    for name, make in PRESETS.items():
+        schema = make("8B")
+        plans = opt.enumerate_plans(schema, system)
+        best = opt.best_qps_per_chip(plans)
+        print(f"\n{name}: pipeline {schema.stages()}")
+        print(f"  {len(plans)} Pareto schedules; RAGO pick "
+              f"{best.qps_per_chip:.3f} QPS/chip @ TTFT "
+              f"{best.ttft*1e3:.1f} ms")
+        print(f"  placement {best.placement} chips "
+              f"{best.detail['group_chips']} + decode "
+              f"{best.detail['decode_chips']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Extended RAG pipeline presets built on the stage registry.
+
+The paper's four case studies live in ``repro.core.ragschema``; these
+presets exercise the registry-only stages (multi-query fan-out, encoder
+safety filter) and combinations the paper does not enumerate -- each is
+just a RAGSchema instance, so ``optimizer.enumerate_plans`` can search it
+and ``RAGEngine`` can execute the same shape.
+"""
+
+from __future__ import annotations
+
+from repro.core.ragschema import (ENCODER_120M, LLAMA3_1B, MODELS, RAGSchema)
+
+
+def multi_query(generative: str = "8B", queries: int = 4) -> RAGSchema:
+    """Multi-query fan-out RAG: a small LLM expands every question into
+    ``queries`` search variants before hyperscale retrieval."""
+    return RAGSchema(generative=MODELS[generative],
+                     queries_per_retrieval=queries,
+                     fanout_model=LLAMA3_1B)
+
+
+def safety_screened(generative: str = "70B") -> RAGSchema:
+    """Encoder safety screen over the assembled prompt before prefill."""
+    return RAGSchema(generative=MODELS[generative],
+                     safety_model=ENCODER_120M)
+
+
+def full_pipeline(generative: str = "70B", queries: int = 2) -> RAGSchema:
+    """Every optional stage at once: rewrite -> fan-out -> retrieval ->
+    rerank -> safety -> prefill/decode."""
+    return RAGSchema(generative=MODELS[generative],
+                     rewriter=MODELS["8B"], reranker=ENCODER_120M,
+                     queries_per_retrieval=queries, fanout_model=LLAMA3_1B,
+                     safety_model=ENCODER_120M)
+
+
+PRESETS = {
+    "multi_query": multi_query,
+    "safety_screened": safety_screened,
+    "full_pipeline": full_pipeline,
+}

@@ -8,6 +8,11 @@ batching (powers-of-two per stage, plus distinct iterative-retrieval batch).
 The search is exhaustive over that space; per-stage Pareto pruning before
 composition is exact for the (TTFT = sum of latencies, QPS = bottleneck
 throughput) objectives, so the returned frontier equals the brute-force one.
+
+The optimizer is stage-agnostic: the pipeline shape, per-stage load,
+weights and cost models all come from the stage registry via
+``RAGSchema.stages()`` / ``repro.core.stages``, so registering a new
+StageSpec makes it searchable here with no optimizer changes.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ from repro.core import cost_model as cmod
 from repro.core import stages as st
 from repro.core.hardware import SystemConfig
 from repro.core.pareto import combine_collocated, combine_serial, pareto
+from repro.core.pipeline_sim import schema_decode_stall
 from repro.core.ragschema import RAGSchema
 from repro.core.retrieval_model import min_servers_for_db, retrieval_perf
 
@@ -55,6 +61,26 @@ def consecutive_partitions(items: list) -> list[list[list]]:
     return out
 
 
+def _frontier_union(points: list[PlanPoint],
+                    include_placement: bool = True) -> list[PlanPoint]:
+    """Union of the (TTFT, QPS) and (TTFT, QPS/chip) Pareto frontiers,
+    deduplicated and sorted by TTFT.
+
+    Plan comparison (Table 4) needs cost-efficiency while serving capacity
+    (offered load) needs absolute QPS, so both frontiers are kept.
+    """
+    f1 = pareto([(p.ttft, p.qps_per_chip, p) for p in points])
+    f2 = pareto([(p.ttft, p.qps, p) for p in points])
+    seen, out = set(), []
+    for _, _, p in f1 + f2:
+        key = (p.ttft, p.qps, p.total_chips) \
+            + ((p.placement,) if include_placement else ())
+        if key not in seen:
+            seen.add(key)
+            out.append(p)
+    return sorted(out, key=lambda p: p.ttft)
+
+
 def _flatten_meta(meta) -> list[dict]:
     if isinstance(meta, dict):
         return [meta]
@@ -67,9 +93,14 @@ def _flatten_meta(meta) -> list[dict]:
 def _iterative_overhead_fn(schema: RAGSchema, sys: SystemConfig,
                            n_servers: int, prefill_chips: int):
     """Extra seconds per generated sequence from §5.3 decode stalls:
-    (freq-1) x [batching wait + retrieval + iteration prefill], with the
-    iterative batch size b_it chosen by RAGO (distinct from the initial
-    batch, §6.1[III])."""
+    (freq-1) x [batching wait + per-event stall], with the iterative batch
+    size b_it chosen by RAGO (distinct from the initial batch, §6.1[III]).
+
+    The per-event stall is the sum of every enabled StageSpec's
+    ``decode_stall`` contribution (retrieval + iteration prefill in the
+    paper pipeline; any registered decode-anchored screen rides along), so
+    the search and ``pipeline_sim.simulate_schema_decode`` price the same
+    events."""
     freq = schema.retrieval_frequency
     if freq <= 1:
         return None
@@ -82,10 +113,8 @@ def _iterative_overhead_fn(schema: RAGSchema, sys: SystemConfig,
         best = float("inf")
         for b_it in st.BATCHES:
             wait = (b_it - 1) / 2.0 / event_rate
-            r = retrieval_perf(schema, sys.host, n_servers, b_it)
-            pre = cmod.prefill_perf(g, sys.xpu, prefill_chips, b_it,
-                                    schema.prefix_len)
-            best = min(best, wait + r.latency + pre.latency)
+            best = min(best, schema_decode_stall(
+                schema, sys, n_servers, prefill_chips, b_it, base=wait))
         return (freq - 1) * best
 
     return overhead
@@ -163,18 +192,7 @@ def enumerate_plans(schema: RAGSchema, sys: SystemConfig,
             all_points.extend(_eval_allocation(
                 schema, sys, placement, chips[:-1], chips[-1],
                 retr_frontier, n_servers, total_budget))
-    # Keep the union of the (TTFT, QPS) and (TTFT, QPS/chip) frontiers:
-    # plan comparison (Table 4) needs cost-efficiency, while serving
-    # capacity (offered load) needs absolute QPS.
-    f1 = pareto([(p.ttft, p.qps_per_chip, p) for p in all_points])
-    f2 = pareto([(p.ttft, p.qps, p) for p in all_points])
-    seen, out = set(), []
-    for _, _, p in f1 + f2:
-        key = (p.ttft, p.qps, p.total_chips, p.placement)
-        if key not in seen:
-            seen.add(key)
-            out.append(p)
-    return sorted(out, key=lambda p: p.ttft)
+    return _frontier_union(all_points)
 
 
 def allocation_sweep(schema: RAGSchema, sys: SystemConfig,
@@ -222,15 +240,7 @@ def baseline_plans(schema: RAGSchema, sys: SystemConfig) -> list[PlanPoint]:
             continue
         pts.extend(_eval_allocation(schema, sys, placement, (n,), n,
                                     retr_frontier, n_servers, total_budget))
-    f1 = pareto([(p.ttft, p.qps_per_chip, p) for p in pts])
-    f2 = pareto([(p.ttft, p.qps, p) for p in pts])
-    seen, out = set(), []
-    for _, _, p in f1 + f2:
-        key = (p.ttft, p.qps, p.total_chips)
-        if key not in seen:
-            seen.add(key)
-            out.append(p)
-    return sorted(out, key=lambda p: p.ttft)
+    return _frontier_union(pts, include_placement=False)
 
 
 def best_qps_per_chip(plans: list[PlanPoint],

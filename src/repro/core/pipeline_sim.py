@@ -10,6 +10,12 @@ batching), so idleness is purely retrieval-induced.
 
 ``normalized_decode_latency`` reproduces Fig. 10b's heat map: retrieval and
 prefill latencies set to zero isolates the batching-induced waiting.
+
+``simulate_schema_decode`` is the registry hook: it derives the per-event
+stall latency from the StageSpecs a schema enables (every spec with a
+``decode_stall`` contribution, e.g. retrieval + iteration prefill + any
+registered screen over retrieved content) so new stages extend the
+simulation without edits here.
 """
 
 from __future__ import annotations
@@ -87,3 +93,40 @@ def simulate_iterative_decode(decode_batch: int, retrieval_batch: int,
             "utilization": utilization,
             "throughput_seqs_per_step": seq_rate,
             "worst_tpot": tpot * norm_latency}
+
+
+def schema_decode_stall(schema, sys, n_servers: int, chips: int,
+                        batch: int, base: float = 0.0) -> float:
+    """Per-event stall seconds for one iterative-retrieval batch: the sum of
+    every enabled StageSpec's ``decode_stall`` contribution (host stages get
+    ``n_servers`` as their resource count, XPU stages get ``chips``).
+
+    ``base`` is accumulated onto left-to-right in registry order so callers
+    composing the stall with another term (the optimizer's batching wait)
+    keep bit-exact float results regardless of where the sum starts."""
+    from repro.core.stage_registry import HOST, REGISTRY
+    total = base
+    for spec in REGISTRY.ordered():
+        if spec.decode_stall is None or not spec.enabled(schema):
+            continue
+        n = n_servers if spec.placement == HOST else chips
+        total += spec.decode_stall(schema, sys, n, batch)
+    return total
+
+
+def simulate_schema_decode(schema, sys, decode_batch: int,
+                           retrieval_batch: int, n_servers: int,
+                           chips: int, n_steps: int = 4096,
+                           seed: int = 0) -> dict:
+    """Registry-driven wrapper: TPOT from the analytical cost model, the
+    per-event stall from ``schema_decode_stall``, then the Monte-Carlo
+    lockstep simulation above."""
+    from repro.core import cost_model as cmod
+    tpot = cmod.decode_tpot(schema.generative, sys.xpu, chips, decode_batch,
+                            schema.prefix_len + schema.decode_len // 2)
+    stall = schema_decode_stall(schema, sys, n_servers, chips,
+                                retrieval_batch)
+    return simulate_iterative_decode(
+        decode_batch, retrieval_batch, schema.retrieval_frequency,
+        decode_len=schema.decode_len, tpot=tpot, retrieval_latency=stall,
+        n_steps=n_steps, seed=seed)

@@ -4,11 +4,18 @@ Captures (1) pipeline structure -- which optional stages exist -- and
 (2) per-component configuration.  Model sizes are parameter counts; the
 paper assumes 8-bit weights so bytes == params.  ``ModelShape`` carries the
 concrete transformer dimensions the operator-level cost model needs.
+
+The pipeline itself is not hard-coded here: ``RAGSchema.stages()`` asks the
+stage registry (``repro.core.stage_registry``) which registered stages the
+schema's fields enable, so new stages become schedulable by registering a
+StageSpec -- no schema edits beyond the enabling field.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+
+from repro.core.stage_registry import REGISTRY
 
 
 @dataclass(frozen=True)
@@ -82,26 +89,28 @@ class RAGSchema:
     # long-context (Case II): raw context tokens to encode, else None
     encode_context_len: int | None = None
     chunk_size: int = 128
+    # multi-query fan-out stage: set fanout_model (with
+    # queries_per_retrieval > 1) to generate the query variants as a real
+    # pipeline stage; leave None to keep the paper's retrieval-load-only
+    # semantics for multiple query vectors (Fig. 6)
+    fanout_model: ModelShape | None = None
+    fanout_out_len: int = 16               # generated tokens per variant
+    # encoder-based safety screen over the assembled prompt, else None
+    safety_model: ModelShape | None = None
 
     @property
     def has_iterative(self) -> bool:
         return self.retrieval_frequency > 1
 
     def stages(self) -> list[str]:
-        """Ordered pipeline stage names (XPU stages + 'retrieval')."""
-        out = []
-        if self.encoder is not None:
-            out.append("encode")
-        if self.rewriter is not None:
-            out.append("rewrite")
-        out.append("retrieval")
-        if self.reranker is not None:
-            out.append("rerank")
-        out += ["prefill", "decode"]
-        return out
+        """Ordered pipeline stage names, derived from the stage registry
+        (every registered stage whose enabling schema field is set)."""
+        return REGISTRY.pipeline(self)
 
     def xpu_stages_before_decode(self) -> list[str]:
-        return [s for s in self.stages() if s not in ("retrieval", "decode")]
+        """Placement-searchable accelerator stages (excludes the host-only
+        retrieval stage and the decode-anchored stage)."""
+        return REGISTRY.xpu_stages(self)
 
 
 # ---------------------------------------------------------------------------

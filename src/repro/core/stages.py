@@ -1,20 +1,20 @@
 """Per-stage performance profiling (Algorithm 1, Step 1).
 
 Maps RAGSchema stage names to (latency, throughput) under a given XPU count
-and batch size, using the operator-level cost model.  ``stage_frontier``
-returns the per-stage Pareto over batch sizes -- the exact pruning that lets
-the exhaustive schedule search stay tractable.
+and batch size.  All per-stage knowledge (load, weights, analytical
+operating points) lives in the stage registry
+(``repro.core.stage_registry``); this module is the thin frontier layer on
+top: ``stage_frontier`` returns the per-stage Pareto over batch sizes --
+the exact pruning that lets the exhaustive schedule search stay tractable.
 """
 
 from __future__ import annotations
-
-from functools import lru_cache
 
 from repro.core import cost_model as cmod
 from repro.core.hardware import SystemConfig
 from repro.core.pareto import pareto
 from repro.core.ragschema import RAGSchema
-from repro.core.retrieval_model import retrieval_perf
+from repro.core.stage_registry import REGISTRY
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 DECODE_BATCHES = BATCHES + (1024,)
@@ -22,11 +22,7 @@ DECODE_BATCHES = BATCHES + (1024,)
 
 def stage_load(schema: RAGSchema, stage: str) -> float:
     """Passes through this stage per served request."""
-    if stage == "retrieval":
-        return float(schema.retrieval_frequency)
-    if stage == "prefill":
-        return 1.0 + (schema.retrieval_frequency - 1)
-    return 1.0
+    return REGISTRY.get(stage).load(schema)
 
 
 def stage_points(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
@@ -34,33 +30,10 @@ def stage_points(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
     """All (latency, throughput) operating points of one stage on ``n``
     chips (or ``n`` servers for retrieval) at one batch size -- one point
     per (tp, pp) factorization (tp==n only for collocated stages)."""
-    xpu = sys.xpu
-    if stage == "encode":
-        return list(cmod.encoder_points(schema.encoder, xpu, n, batch,
-                                        schema.encode_context_len,
-                                        schema.chunk_size, tp_only=tp_only))
-    if stage == "rewrite":
-        tpot = cmod.decode_tpot(schema.rewriter, xpu, n, batch,
-                                schema.question_len)
-        out = []
-        for p in cmod.prefill_points(schema.rewriter, xpu, n, batch,
-                                     schema.question_len, tp_only=tp_only):
-            lat = p.latency + schema.rewriter_out_len * tpot
-            out.append(cmod.StagePerf(lat, batch / lat))
-        return out
-    if stage == "rerank":
-        tokens = schema.rerank_candidates * schema.rerank_doc_tokens
-        return list(cmod.encoder_points(schema.reranker, xpu, n, batch,
-                                        tokens, schema.rerank_doc_tokens,
-                                        tp_only=tp_only))
-    if stage == "prefill":
-        return list(cmod.prefill_points(schema.generative, xpu, n, batch,
-                                        schema.prefix_len,
-                                        tp_only=tp_only))
-    if stage == "retrieval":
-        perf = retrieval_perf(schema, sys.host, n, batch)
-        return [cmod.StagePerf(perf.latency, perf.throughput)]
-    raise ValueError(stage)
+    spec = REGISTRY.get(stage)
+    if spec.points is None:
+        raise ValueError(f"stage {stage!r} has no analytical points model")
+    return spec.points(schema, sys, n, batch, tp_only=tp_only)
 
 
 def stage_perf(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
@@ -71,10 +44,8 @@ def stage_perf(schema: RAGSchema, sys: SystemConfig, stage: str, n: int,
 
 
 def stage_weights_bytes(schema: RAGSchema, stage: str) -> float:
-    model = {"encode": schema.encoder, "rewrite": schema.rewriter,
-             "rerank": schema.reranker, "prefill": schema.generative,
-             "decode": schema.generative}.get(stage)
-    return model.params * cmod.BYTES_W if model is not None else 0.0
+    """Accelerator memory pinned by the stage's model weights."""
+    return REGISTRY.get(stage).weights_bytes(schema)
 
 
 def stage_frontier(schema: RAGSchema, sys: SystemConfig, stage: str,

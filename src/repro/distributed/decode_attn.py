@@ -18,7 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed.compat import shard_map
 
 from repro.launch.mesh import dp_axes
 from repro.models.common import repeat_kv

@@ -1,29 +1,39 @@
 """RAG serving engine: executes a RAGSchema pipeline end-to-end on real JAX
 models + the JAX retrieval engine.
 
-Pipeline per request (stages optional per schema, mirroring Fig. 3):
+Pipeline per request (stages optional per engine components/config,
+mirroring Fig. 3):
 
-  [rewrite] -> embed query -> retrieve (IVF-PQ or exact) -> [rerank]
-  -> prefill (question + docs) -> continuous-batched decode
-  [-> iterative retrieval during decode (§5.3): sequences stall until the
-      iterative retrieval batch fills, then new context is appended]
+  [rewrite] -> [multi-query fan-out] -> embed -> retrieve -> [rerank]
+  -> [safety filter] -> prefill (question + docs) -> continuous-batched
+  decode [-> iterative retrieval during decode (§5.3)]
+
+The pre-prefill pipeline is not hard-coded: at construction the engine asks
+the stage registry (``repro.core.stage_registry``) for StageExecutor
+objects -- every registered StageSpec with an active ``make_executor`` for
+this engine contributes one, in registry order.  The engine keeps only the
+shared infrastructure (corpus + database embeddings, KV-cache pool, the
+slot-based decode loop) and the two decode-anchored mechanisms (prefill,
+continuous batching); everything else is composable.
 
 The decode loop is slot-based (fixed shapes for XLA) with Orca-style
 continuous batching: finished sequences free their slot and queued requests
-are admitted with a fresh prefill.  Prompt lengths are bucketed to powers of
-two to bound recompilation.
+are admitted with a fresh prefill.  Prompt lengths are bucketed to powers
+of two and each bucket's prefill is jit-compiled once, so compile count is
+bounded by the number of distinct buckets.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stage_registry import REGISTRY
 from repro.models import transformer as tr
 from repro.retrieval.exact import knn
 from repro.serving.kv_cache import KVCachePool
@@ -42,6 +52,9 @@ class EngineConfig:
     rerank: bool = False
     rerank_candidates: int = 8
     eos_token: int | None = None
+    fanout_queries: int = 1                # >1 enables multi-query fan-out
+    fanout_tokens: int = 4                 # generated tokens per variant
+    safety_threshold: float | None = None  # drop docs scoring below this
 
 
 @dataclass
@@ -54,12 +67,14 @@ class RAGEngine:
     def __init__(self, generative: Component, encoder: Component,
                  corpus_tokens: np.ndarray, cfg: EngineConfig,
                  rewriter: Component | None = None,
-                 reranker: Component | None = None):
+                 reranker: Component | None = None,
+                 safety: Component | None = None):
         """corpus_tokens: (n_docs, doc_len) int32 database passages."""
         self.gen = generative
         self.enc = encoder
         self.rewriter = rewriter
         self.reranker = reranker
+        self.safety = safety
         self.cfg = cfg
         self.corpus = np.asarray(corpus_tokens)
         self.pool = KVCachePool(generative.cfg, cfg.decode_slots, cfg.s_max)
@@ -67,13 +82,19 @@ class RAGEngine:
         self.active: dict[int, Request] = {}     # slot -> request
         self.pending_retrievals: list[Request] = []
         self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
-                        "retrieval_batches": 0, "prefills": 0}
+                        "retrieval_batches": 0, "prefills": 0,
+                        "prefill_compiles": 0}
         self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
-        self._prefill_jit = {}
+        self._prefill_jit = {}                   # bucket -> jitted prefill
         # database embeddings (the paper's offline encode step)
         self.db_vectors = np.asarray(self._embed_batched(self.corpus))
+        # executable pipeline, derived from the stage registry
+        self.executors = REGISTRY.engine_executors(self)
 
-    # ---------------- components -----------------------------------------
+    # ---------------- shared primitives -----------------------------------
+
+    def has_executor(self, name: str) -> bool:
+        return any(ex.name == name for ex in self.executors)
 
     def _embed_batched(self, tokens: np.ndarray, bs: int = 32) -> jnp.ndarray:
         outs = []
@@ -83,55 +104,18 @@ class RAGEngine:
             outs.append(h)
         return jnp.concatenate(outs)
 
-    def _embed_one(self, tokens: np.ndarray) -> jnp.ndarray:
-        return tr.encode(self.enc.params, jnp.asarray(tokens)[None],
-                         self.enc.cfg)[0]
-
-    def _retrieve(self, queries: np.ndarray, k: int) -> np.ndarray:
+    def retrieve(self, queries: np.ndarray, k: int) -> np.ndarray:
         """queries: (B, T) -> (B, k) doc indices."""
         qv = self._embed_batched(queries)
         _, idx = knn(qv, jnp.asarray(self.db_vectors), k=k, metric="cosine")
         return np.asarray(idx)
 
-    def _rerank(self, question: np.ndarray, cand_ids: np.ndarray,
-                k: int) -> np.ndarray:
-        """Score candidates with the reranker encoder; return top-k ids."""
-        qv = tr.encode(self.reranker.params, jnp.asarray(question)[None],
-                       self.reranker.cfg)[0]
-        docs = jnp.asarray(self.corpus[cand_ids])
-        dv = tr.encode(self.reranker.params, docs, self.reranker.cfg)
-        scores = dv @ qv
-        order = np.asarray(jnp.argsort(-scores))[:k]
-        return cand_ids[order]
+    # ---------------- admission / prefill ----------------------------------
 
-    def _generate_greedy(self, comp: Component, prompt: np.ndarray,
-                         n_tokens: int) -> np.ndarray:
-        """Small greedy generation loop (query rewriter stage)."""
-        cache_len = int(2 ** np.ceil(np.log2(prompt.shape[0] + n_tokens + 1)))
-        logits, cache = tr.prefill(comp.params, jnp.asarray(prompt)[None],
-                                   comp.cfg, cache_len=cache_len)
-        toks = []
-        pos = prompt.shape[0]
-        tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
-        for _ in range(n_tokens):
-            toks.append(int(tok))
-            logits, cache = tr.decode_step(
-                comp.params, cache, tok[None].astype(jnp.int32),
-                jnp.asarray([pos], jnp.int32), comp.cfg)
-            tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
-            pos += 1
-        return np.asarray(toks, np.int32)
-
-    # ---------------- pipeline stages -------------------------------------
-
-    def _build_prompt(self, req: Request) -> np.ndarray:
+    def _assemble_prompt(self, req: Request) -> np.ndarray:
         q = req.rewritten if req.rewritten is not None else req.question
-        k = self.cfg.retrieval_k
-        if self.reranker is not None and self.cfg.rerank:
-            cand = self._retrieve(q[None], self.cfg.rerank_candidates)[0]
-            ids = self._rerank(q, cand, k)
-        else:
-            ids = self._retrieve(q[None], k)[0]
+        ids = req.candidate_ids if req.candidate_ids is not None \
+            else np.asarray([], np.int64)
         req.retrieved_ids.append(list(map(int, ids)))
         docs = self.corpus[ids].reshape(-1)
         prompt = np.concatenate([docs, q])
@@ -139,19 +123,26 @@ class RAGEngine:
         return prompt[-max_prompt:].astype(np.int32)
 
     def _prefill(self, req: Request, slot: int) -> None:
+        """Bucketed prefill: pad the prompt to the next power of two and run
+        one jit-compiled full-logits forward per bucket.  Causality makes
+        tail padding inert for positions < len(prompt); the first token's
+        logits are read at position len(prompt)-1 and only the valid cache
+        prefix is installed in the slot."""
         prompt = req.prompt
-        bucket = int(2 ** np.ceil(np.log2(max(len(prompt), 8))))
-        padded = np.zeros(bucket, np.int32)
-        padded[:len(prompt)] = prompt
-        if bucket not in self._prefill_jit:
-            self._prefill_jit[bucket] = jax.jit(
-                partial(tr.prefill, cfg=self.gen.cfg))
-        # note: padding tokens at the tail would pollute the cache; prefill
-        # exactly the prompt length via the unpadded path when short
-        logits, cache = tr.prefill(self.gen.params,
-                                   jnp.asarray(prompt)[None], self.gen.cfg)
-        self.pool.write_prefix(slot, cache, len(prompt))
-        tok = int(jnp.argmax(logits[0][:self.gen.cfg.vocab_size]))
+        length = len(prompt)
+        bucket = int(2 ** np.ceil(np.log2(max(length, 8))))
+        fn = self._prefill_jit.get(bucket)
+        if fn is None:
+            fn = jax.jit(partial(tr.forward, cfg=self.gen.cfg,
+                                 collect_cache=True))
+            self._prefill_jit[bucket] = fn
+            self.metrics["prefill_compiles"] += 1
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :length] = prompt
+        logits, _aux, cache = fn(self.gen.params, jnp.asarray(padded))
+        self.pool.write_prefix(slot, cache, length)
+        tok = int(jnp.argmax(logits[0, length - 1,
+                             :self.gen.cfg.vocab_size]))
         req.output.append(tok)
         req.t_first_token = time.monotonic()
         req.state = State.DECODE
@@ -161,16 +152,14 @@ class RAGEngine:
     def _admit(self) -> None:
         while self.queue and self.pool.free:
             req = self.queue.pop(0)
-            if self.cfg.rewrite_tokens and self.rewriter is not None:
-                req.state = State.REWRITING
-                extra = self._generate_greedy(self.rewriter, req.question,
-                                              self.cfg.rewrite_tokens)
-                req.rewritten = np.concatenate([req.question, extra])
-            req.state = State.RETRIEVING
-            req.prompt = self._build_prompt(req)
+            for ex in self.executors:
+                ex.run(self, req)
+            req.prompt = self._assemble_prompt(req)
             slot = self.pool.alloc(req.rid)
             self._prefill(req, slot)
             self.active[req.slot] = req
+
+    # ---------------- decode loop ------------------------------------------
 
     def _append_tokens(self, slot: int, tokens: np.ndarray) -> None:
         """Append retrieved content into a slot's cache (iteration prefill).
@@ -199,15 +188,23 @@ class RAGEngine:
             qs = np.stack([np.asarray(req.output[-8:], np.int32)
                            if len(req.output) >= 8 else req.question
                            for req in batch])
-            ids = self._retrieve(qs, 1)
+            ids = self.retrieve(qs, 1)
             self.metrics["retrieval_batches"] += 1
             for req, docs in zip(batch, ids):
+                # executors may screen iteratively retrieved content before
+                # it reaches the cache (same events the analytical
+                # decode_stall prices)
+                for ex in self.executors:
+                    fi = getattr(ex, "filter_iterative", None)
+                    if fi is not None:
+                        docs = fi(self, req, docs)
                 req.retrieved_ids.append(list(map(int, docs)))
                 req.retrievals_done += 1
-                new_ctx = self.corpus[docs[0]]
-                room = self.pool.s_max - self.pool.lengths[req.slot] - 2
-                if room > 0:
-                    self._append_tokens(req.slot, new_ctx[:room])
+                if len(docs):
+                    new_ctx = self.corpus[docs[0]]
+                    room = self.pool.s_max - self.pool.lengths[req.slot] - 2
+                    if room > 0:
+                        self._append_tokens(req.slot, new_ctx[:room])
                 req.state = State.DECODE
 
     def _decode_step(self) -> None:

@@ -1,0 +1,157 @@
+"""Composable StageExecutor objects for the RAG serving engine.
+
+Each executor is the *executable* counterpart of one registered StageSpec
+(``repro.core.stage_registry``): the registry's ``make_executor`` factories
+decide from an engine's components/config which executors are active, and
+``RAGEngine`` runs the resulting chain per admitted request.  The engine
+itself owns only shared infrastructure (corpus, database embeddings, KV
+pool, decode loop); all pre-prefill stage logic lives here, so adding an
+executable stage is a registry entry + an executor class -- no engine
+edits.
+
+Executor contract: ``run(engine, request)`` mutates the request in place
+(state transitions + stage outputs) and may call engine primitives
+(``embed``, ``retrieve``).  Executors run in registry order during
+admission, before prompt assembly and prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tr
+from repro.serving.request import State
+
+
+def generate_greedy(comp, prompt: np.ndarray, n_tokens: int) -> np.ndarray:
+    """Small greedy generation loop (rewriter / fan-out variants)."""
+    cache_len = int(2 ** np.ceil(np.log2(prompt.shape[0] + n_tokens + 1)))
+    logits, cache = tr.prefill(comp.params, jnp.asarray(prompt)[None],
+                               comp.cfg, cache_len=cache_len)
+    toks = []
+    pos = prompt.shape[0]
+    tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
+    for _ in range(n_tokens):
+        toks.append(int(tok))
+        logits, cache = tr.decode_step(
+            comp.params, cache, tok[None].astype(jnp.int32),
+            jnp.asarray([pos], jnp.int32), comp.cfg)
+        tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
+        pos += 1
+    return np.asarray(toks, np.int32)
+
+
+def _query(req) -> np.ndarray:
+    return req.rewritten if req.rewritten is not None else req.question
+
+
+class RewriteExecutor:
+    """Autoregressive query rewrite: question -> question + generated
+    expansion tokens."""
+    name = "rewrite"
+
+    def run(self, eng, req) -> None:
+        req.state = State.REWRITING
+        extra = generate_greedy(eng.rewriter, req.question,
+                                eng.cfg.rewrite_tokens)
+        req.rewritten = np.concatenate([req.question, extra])
+
+
+class MultiQueryExecutor:
+    """Multi-query fan-out: expand the (possibly rewritten) question into
+    ``fanout_queries`` variants, each the base query plus a short greedy
+    continuation from a distinct seed token.  Downstream retrieval searches
+    with every variant and unions the candidates."""
+    name = "multi_query"
+
+    def run(self, eng, req) -> None:
+        base = _query(req)
+        model = eng.rewriter if eng.rewriter is not None else eng.gen
+        variants = [base]
+        for i in range(1, eng.cfg.fanout_queries):
+            seed = np.append(base, np.int32(i % model.cfg.vocab_size))
+            extra = generate_greedy(model, seed, eng.cfg.fanout_tokens)
+            variants.append(np.concatenate([base, extra]))
+        req.query_variants = variants
+
+
+class RetrieveExecutor:
+    """Embed the query (or every fan-out variant) and fetch candidate doc
+    ids; variants' result lists are rank-interleaved and deduplicated."""
+    name = "retrieval"
+
+    def run(self, eng, req) -> None:
+        req.state = State.RETRIEVING
+        k = (eng.cfg.rerank_candidates if eng.has_executor("rerank")
+             else eng.cfg.retrieval_k)
+        queries = req.query_variants or [_query(req)]
+        # the base query keeps its own length; generated variants all share
+        # one length, so they batch into a single database scan
+        per_query = [eng.retrieve(queries[0][None], k)[0]]
+        if len(queries) > 1:
+            per_query += list(eng.retrieve(np.stack(queries[1:]), k))
+        seen, ids = set(), []
+        for rank in range(k):
+            for cand in per_query:
+                d = int(cand[rank])
+                if d not in seen:
+                    seen.add(d)
+                    ids.append(d)
+        req.candidate_ids = np.asarray(ids[:k], np.int64)
+
+
+class RerankExecutor:
+    """Score retrieval candidates with the reranker encoder; keep top-k."""
+    name = "rerank"
+
+    def run(self, eng, req) -> None:
+        q = _query(req)
+        cand = req.candidate_ids
+        qv = tr.encode(eng.reranker.params, jnp.asarray(q)[None],
+                       eng.reranker.cfg)[0]
+        docs = jnp.asarray(eng.corpus[cand])
+        dv = tr.encode(eng.reranker.params, docs, eng.reranker.cfg)
+        scores = dv @ qv
+        order = np.asarray(jnp.argsort(-scores))[:eng.cfg.retrieval_k]
+        req.candidate_ids = cand[order]
+
+
+class SafetyFilterExecutor:
+    """Encoder-based screen over retrieved documents: each candidate doc
+    gets a score from the safety encoder (first hidden dim through a
+    sigmoid -- the stand-in for a trained safety head); docs scoring below
+    ``cfg.safety_threshold`` are dropped from the prompt.  With threshold
+    ``None`` the stage only records scores."""
+    name = "safety_filter"
+
+    def _score(self, eng, doc_ids) -> np.ndarray:
+        dv = tr.encode(eng.safety.params, jnp.asarray(eng.corpus[doc_ids]),
+                       eng.safety.cfg)
+        return np.asarray(jax.nn.sigmoid(dv[:, 0].astype(jnp.float32)))
+
+    def run(self, eng, req) -> None:
+        cand = req.candidate_ids
+        if cand is None or len(cand) == 0:
+            req.safety_scores = []
+            return
+        scores = self._score(eng, cand)
+        req.safety_scores = [float(s) for s in scores]
+        thr = eng.cfg.safety_threshold
+        if thr is not None:
+            req.candidate_ids = cand[scores >= thr]
+
+    def filter_iterative(self, eng, req, doc_ids):
+        """Screen iteratively retrieved docs before the cache append (the
+        executable counterpart of this stage's analytical decode_stall)."""
+        if len(doc_ids) == 0:
+            return doc_ids
+        scores = self._score(eng, doc_ids)
+        if req.safety_scores is None:
+            req.safety_scores = []
+        req.safety_scores.extend(float(s) for s in scores)
+        thr = eng.cfg.safety_threshold
+        if thr is None:
+            return doc_ids
+        return doc_ids[scores >= thr]

@@ -28,6 +28,9 @@ class Request:
     rid: int = field(default_factory=lambda: next(_ids))
     state: State = State.QUEUED
     rewritten: np.ndarray | None = None
+    query_variants: list | None = None    # multi-query fan-out variants
+    candidate_ids: np.ndarray | None = None  # retrieval/rerank candidates
+    safety_scores: list | None = None     # safety-filter doc scores
     retrieved_ids: list = field(default_factory=list)
     prompt: np.ndarray | None = None      # question + retrieved content
     output: list = field(default_factory=list)

@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim: property tests skip (instead of erroring the
+whole module at collection) when ``hypothesis`` is not installed.
+
+Usage in test modules:  ``from _hyp import given, settings, hst``
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any strategy constructor
+        returns None (never drawn from -- the test is skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hst = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda f: f

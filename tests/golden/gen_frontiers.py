@@ -1,0 +1,54 @@
+"""Regenerate the golden Pareto-frontier snapshot for the four paper case
+studies at a small chip budget.
+
+Run:  PYTHONPATH=src python tests/golden/gen_frontiers.py
+
+The snapshot pins ``optimizer.enumerate_plans`` output exactly (floats are
+round-tripped through ``repr`` by json), so any refactor of the stage /
+optimizer layers can be checked for byte-identical frontiers.
+"""
+
+import json
+import os
+
+from repro.core import optimizer as opt
+from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.ragschema import case_I, case_II, case_III, case_IV
+
+SYS = SystemConfig(n_servers=4, xpu=XPU_C)          # 16-XPU budget
+
+CASES = {
+    "case_I": case_I(),
+    "case_II": case_II("70B", 1_000_000),
+    "case_III": case_III("70B"),
+    "case_IV": case_IV("70B"),
+}
+
+
+def plan_record(p):
+    return {
+        "ttft": p.ttft,
+        "qps": p.qps,
+        "qps_per_chip": p.qps_per_chip,
+        "qps_per_platform_chip": p.qps_per_platform_chip,
+        "total_chips": p.total_chips,
+        "placement": [list(g) for g in p.placement],
+        "stages": p.detail["stages"],
+        "group_chips": list(p.detail["group_chips"]),
+        "decode_chips": p.detail["decode_chips"],
+        "n_servers": p.detail["n_servers"],
+    }
+
+
+def frontier_snapshot():
+    return {name: [plan_record(p) for p in opt.enumerate_plans(schema, SYS)]
+            for name, schema in CASES.items()}
+
+
+if __name__ == "__main__":
+    out = os.path.join(os.path.dirname(__file__), "frontiers.json")
+    snap = frontier_snapshot()
+    with open(out, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print({k: len(v) for k, v in snap.items()}, "->", out)

@@ -82,7 +82,11 @@ def test_split_k_decode_attention_multidevice():
     r = subprocess.run([sys.executable, "-c", _SPLITK_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+                            # containers with libtpu hang probing the TPU
+                            # metadata service; the 8 forced devices are
+                            # host-platform anyway
+                            "JAX_PLATFORMS": "cpu"})
     assert "SPLITK_OK" in r.stdout, r.stderr[-2000:]
 
 

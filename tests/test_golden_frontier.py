@@ -1,0 +1,44 @@
+"""Golden-frontier regression: ``enumerate_plans`` output on the four paper
+case studies (small chip budget) is pinned byte-for-byte by
+``tests/golden/frontiers.json`` (generated from the pre-registry seed code;
+regenerate with ``python tests/golden/gen_frontiers.py`` only for an
+intentional cost-model change)."""
+
+import json
+import os
+import sys
+
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+sys.path.insert(0, GOLDEN_DIR)
+
+from gen_frontiers import CASES, frontier_snapshot  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def snapshot():
+    return frontier_snapshot()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(os.path.join(GOLDEN_DIR, "frontiers.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_frontier_matches_golden(case, snapshot, golden):
+    got = json.loads(json.dumps(snapshot[case]))   # normalize tuples
+    assert got == golden[case], (
+        f"{case}: Pareto frontier drifted from the golden snapshot "
+        f"({len(got)} vs {len(golden[case])} plans)")
+
+
+def test_golden_serialization_is_canonical(snapshot, golden):
+    """Byte-level check: re-serializing the live frontier reproduces the
+    golden file exactly."""
+    live = json.dumps(json.loads(json.dumps(snapshot)), indent=1,
+                      sort_keys=True) + "\n"
+    with open(os.path.join(GOLDEN_DIR, "frontiers.json")) as f:
+        assert live == f.read()

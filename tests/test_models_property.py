@@ -4,7 +4,7 @@ sharding helpers)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, hst, settings
 
 from repro.models import gnn
 from repro.models.embedding import StackedTables, embedding_bag

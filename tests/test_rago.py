@@ -3,7 +3,7 @@ iterative-decode simulation anchors."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, hst, settings
 
 from repro.core import cost_model as cmod
 from repro.core import optimizer as opt

@@ -12,6 +12,8 @@ from repro.serving.engine import Component, EngineConfig, RAGEngine
 from repro.serving.kv_cache import KVCachePool
 from repro.serving.request import Request, State
 
+pytestmark = pytest.mark.slow        # jit-compiles per engine instance
+
 VOCAB = 128
 
 
@@ -94,6 +96,84 @@ def test_rewriter_and_reranker_stages(stack):
     assert out.rewritten is not None
     assert len(out.rewritten) == len(out.question) + 3
     assert len(out.retrieved_ids[0]) == 2
+
+
+def test_multi_query_and_safety_stages(stack):
+    """The two registry-only stages execute end-to-end: fan-out produces
+    query variants, the safety filter scores every retrieved doc."""
+    gen, enc, corpus, _, make_q = stack
+    safety = _component(9, causal=False, d=32)
+    engine = RAGEngine(gen, enc, corpus,
+                       EngineConfig(decode_slots=2, s_max=96,
+                                    max_new_tokens=4, fanout_queries=3,
+                                    fanout_tokens=2, retrieval_k=2),
+                       safety=safety)
+    # executable pipeline derived from the registry, in registry order
+    assert [ex.name for ex in engine.executors] == \
+        ["multi_query", "retrieval", "safety_filter"]
+    reqs = [Request(question=make_q(i % 4)) for i in range(3)]
+    out = engine.serve(reqs)
+    assert all(r.state is State.DONE for r in out)
+    assert all(len(r.query_variants) == 3 for r in out)
+    for r in out:
+        assert r.safety_scores is not None
+        assert len(r.safety_scores) == len(r.retrieved_ids[0]) == 2
+        assert all(0.0 <= s <= 1.0 for s in r.safety_scores)
+
+
+def test_safety_threshold_drops_all_docs(stack):
+    """An impossible threshold screens out every retrieved doc: the prompt
+    degrades to the bare question."""
+    gen, enc, corpus, _, make_q = stack
+    safety = _component(9, causal=False, d=32)
+    engine = RAGEngine(gen, enc, corpus,
+                       EngineConfig(decode_slots=1, s_max=96,
+                                    max_new_tokens=2, retrieval_k=2,
+                                    safety_threshold=1.1),
+                       safety=safety)
+    req = Request(question=make_q(0, q_len=10))
+    engine.serve([req])
+    assert req.state is State.DONE
+    assert req.retrieved_ids[0] == []
+    np.testing.assert_array_equal(req.prompt, req.question)
+
+
+def test_safety_screens_iterative_retrievals(stack):
+    """The executable engine screens iteratively retrieved content with the
+    same stage the analytical decode_stall prices: an impossible threshold
+    blocks every doc from the cache, initial and mid-decode alike."""
+    gen, enc, corpus, _, make_q = stack
+    safety = _component(9, causal=False, d=32)
+    engine = RAGEngine(gen, enc, corpus,
+                       EngineConfig(decode_slots=2, s_max=96,
+                                    max_new_tokens=9, iterative_interval=3,
+                                    retrieval_batch=2, retrieval_k=1,
+                                    safety_threshold=1.1),
+                       safety=safety)
+    reqs = [Request(question=make_q(i % 4)) for i in range(2)]
+    out = engine.serve(reqs)
+    assert all(r.state is State.DONE for r in out)
+    for r in out:
+        assert r.retrievals_done >= 1
+        assert all(ids == [] for ids in r.retrieved_ids)
+        assert len(r.safety_scores) >= r.retrievals_done
+
+
+def test_prefill_bucket_compile_bound(stack):
+    """Bucketed prefill jit-compiles once per power-of-two bucket, not once
+    per distinct prompt length."""
+    gen, enc, corpus, _, make_q = stack
+    engine = RAGEngine(gen, enc, corpus,
+                       EngineConfig(decode_slots=2, s_max=96,
+                                    max_new_tokens=2, retrieval_k=1))
+    q_lens = (3, 4, 5, 6, 11, 12, 18, 19)
+    for i, qlen in enumerate(q_lens):
+        engine.serve([Request(question=make_q(i % 4, q_len=qlen))])
+    # prompt = 10 doc tokens + question -> lengths 13..29 -> buckets {16,32}
+    buckets = {int(2 ** np.ceil(np.log2(max(10 + q, 8)))) for q in q_lens}
+    assert engine.metrics["prefills"] == len(q_lens)
+    assert engine.metrics["prefill_compiles"] == len(buckets)
+    assert set(engine._prefill_jit) == buckets
 
 
 def test_kv_pool_slot_lifecycle():

@@ -3,6 +3,7 @@ serving engine executing the same pipeline shape."""
 
 import jax
 import numpy as np
+import pytest
 
 from repro.core import optimizer as opt
 from repro.core.hardware import SystemConfig, XPU_C
@@ -11,6 +12,8 @@ from repro.data.synthetic import topical_corpus
 from repro.models import transformer as tr
 from repro.serving.engine import Component, EngineConfig, RAGEngine
 from repro.serving.request import Request, State
+
+pytestmark = pytest.mark.slow        # jit-compiles a full engine stack
 
 
 def test_rago_plan_then_engine_executes_pipeline():
@@ -35,11 +38,18 @@ def test_rago_plan_then_engine_executes_pipeline():
     engine = RAGEngine(comp(0), comp(1, causal=False, d=32), corpus,
                        EngineConfig(decode_slots=2, s_max=96,
                                     max_new_tokens=4, rewrite_tokens=2,
-                                    rerank=True, retrieval_k=2),
+                                    rerank=True, retrieval_k=2,
+                                    fanout_queries=2, fanout_tokens=2),
                        rewriter=comp(2), reranker=comp(3, causal=False,
-                                                       d=32))
+                                                       d=32),
+                       safety=comp(4, causal=False, d=32))
+    # the executable chain follows registry order across all five stages
+    assert [ex.name for ex in engine.executors] == \
+        ["rewrite", "multi_query", "retrieval", "rerank", "safety_filter"]
     reqs = [Request(question=make_q(t)) for t in range(3)]
     done = engine.serve(reqs)
     assert all(r.state is State.DONE for r in done)
     assert all(r.rewritten is not None for r in done)
+    assert all(len(r.query_variants) == 2 for r in done)
+    assert all(r.safety_scores is not None for r in done)
     assert all(len(r.output) == 4 for r in done)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, hst, settings
 
 from repro.training import checkpoint as ck
 from repro.training import compression as comp

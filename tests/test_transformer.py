@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hyp import given, hst, settings
 
 from repro.models import common as cm
 from repro.models import transformer as tr
