@@ -1,0 +1,205 @@
+"""Serving benchmark harness: drives ``RAGEngine`` over the
+``configs/rag_pipelines`` presets and writes ``BENCH_serving.json``.
+
+Per preset x retrieval backend it reports QPS, TTFT, TPOT, tokens/s,
+retrieval recall@k vs the exact backend, and the engine's hot-path metrics
+(host syncs, cache-copy bytes), so successive PRs have a perf trajectory
+(RAGPulse-style: measure the pipeline, not just the kernels).  It also
+times the IVF-PQ scan and emits the calibrated per-core scan bandwidth the
+analytical retrieval model (``core/retrieval_model.calibrate_host``) can
+consume in place of the paper's 18 GB/s constant.
+
+Each preset's RAGSchema selects which pipeline stages run; the models
+themselves are tiny stand-ins (this container benches the serving
+machinery, not model FLOPs -- paper-scale numbers come from the analytical
+cost model).
+
+Usage:
+    PYTHONPATH=src python benchmarks/serving_bench.py            # full
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+import numpy as np
+
+RETRIEVAL_K = 2
+
+
+def _components(schema, vocab: int):
+    """Tiny transformer stand-ins for the stages the schema enables."""
+    import jax
+
+    from repro.models import transformer as tr
+    from repro.serving.engine import Component
+
+    def mk(seed, causal=True, d=48):
+        cfg = tr.TransformerConfig(name=f"bench{seed}", n_layers=2,
+                                   d_model=d, n_heads=4, n_kv_heads=2,
+                                   d_head=16, d_ff=64, vocab_size=vocab,
+                                   causal=causal)
+        return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+    comps = {"generative": mk(0), "encoder": mk(1, causal=False, d=32)}
+    if schema.rewriter is not None:
+        comps["rewriter"] = mk(2)
+    if schema.reranker is not None:
+        comps["reranker"] = mk(3, causal=False, d=32)
+    if schema.safety_model is not None:
+        comps["safety"] = mk(4, causal=False, d=32)
+    return comps
+
+
+def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int):
+    from repro.serving.engine import EngineConfig
+    fanout = (schema.queries_per_retrieval
+              if schema.fanout_model is not None else 1)
+    return EngineConfig(
+        decode_slots=4, s_max=s_max, retrieval_k=RETRIEVAL_K,
+        max_new_tokens=max_new_tokens,
+        rewrite_tokens=3 if schema.rewriter is not None else 0,
+        rerank=schema.reranker is not None, rerank_candidates=6,
+        fanout_queries=fanout, fanout_tokens=2,
+        safety_threshold=0.0 if schema.safety_model is not None else None,
+        retrieval_backend=backend)
+
+
+def _recall_vs_exact(engine, questions) -> float:
+    """Mean recall@k of the engine's backend against exact search over the
+    engine's own database embeddings."""
+    from repro.retrieval.backend import ExactBackend
+    from repro.retrieval.ivf_pq import overlap_recall
+    qv = engine._embed_batched(np.stack(questions))
+    exact = ExactBackend(engine.db_vectors)
+    _, e_ids = exact.search(qv, RETRIEVAL_K)
+    _, a_ids = engine.backend.search(qv, RETRIEVAL_K)
+    return overlap_recall(a_ids, e_ids)
+
+
+def run_preset(name: str, schema, backend: str, corpus, questions,
+               max_new_tokens: int) -> dict:
+    from repro.serving.engine import RAGEngine
+    from repro.serving.request import Request, State
+
+    comps = _components(schema, vocab=128)
+    cfg = _engine_config(schema, backend, s_max=128,
+                         max_new_tokens=max_new_tokens)
+    engine = RAGEngine(comps["generative"], comps["encoder"], corpus, cfg,
+                       rewriter=comps.get("rewriter"),
+                       reranker=comps.get("reranker"),
+                       safety=comps.get("safety"))
+    reqs = [Request(question=q.copy()) for q in questions]
+    t0 = time.perf_counter()
+    out = engine.serve(reqs)
+    wall = time.perf_counter() - t0
+    done = [r for r in out if r.state is State.DONE]
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    tpots = [(r.latency - r.ttft) / (len(r.output) - 1)
+             for r in done if r.ttft is not None and len(r.output) > 1]
+    tokens = sum(len(r.output) for r in done)
+    return {
+        "backend": backend,
+        "n_requests": len(reqs),
+        "n_done": len(done),
+        "wall_s": round(wall, 4),
+        "qps": round(len(done) / wall, 3),
+        "ttft_s": round(statistics.mean(ttfts), 5) if ttfts else None,
+        "tpot_s": round(statistics.mean(tpots), 5) if tpots else None,
+        "tokens_per_s": round(tokens / wall, 2),
+        "recall_at_k_vs_exact": round(_recall_vs_exact(engine, questions), 4),
+        "metrics": dict(engine.metrics),
+    }
+
+
+def _scan_calibration(corpus, questions) -> dict:
+    """Measured backend scan throughput -> calibrated analytical host."""
+    import jax
+
+    from repro.core.hardware import EPYC_MILAN
+    from repro.core.retrieval_model import calibrate_host
+    from repro.models import transformer as tr
+    from repro.retrieval.backend import (ExactBackend, IVFPQBackend,
+                                         measure_scan_bw)
+    from repro.serving.engine import Component
+
+    cfg = tr.TransformerConfig(name="cal-enc", n_layers=2, d_model=32,
+                               n_heads=2, n_kv_heads=2, d_head=16, d_ff=64,
+                               vocab_size=128, causal=False)
+    enc = Component(cfg, tr.init_params(jax.random.PRNGKey(1), cfg))
+    vecs = np.asarray(tr.encode(enc.params, np.stack([c for c in corpus]),
+                                cfg))
+    qv = np.asarray(tr.encode(enc.params, np.stack(questions), cfg))
+    out = {}
+    for backend in (ExactBackend(vecs), IVFPQBackend(vecs)):
+        out[f"{backend.name}_scan_bytes_per_s"] = round(
+            measure_scan_bw(backend, qv, k=RETRIEVAL_K), 1)
+    calibrated = calibrate_host(EPYC_MILAN,
+                                out["ivfpq_scan_bytes_per_s"])
+    out["calibrated_pq_scan_bw_per_core"] = calibrated.pq_scan_bw_per_core
+    return out
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny corpus / few requests / baseline preset only")
+    p.add_argument("--out", default="BENCH_serving.json")
+    p.add_argument("--presets", default=None,
+                   help="comma-separated preset names (default: all)")
+    p.add_argument("--backends", default="exact,ivfpq")
+    args = p.parse_args(argv)
+
+    import jax
+
+    from repro.configs.rag_pipelines import PRESETS
+    from repro.data.synthetic import topical_corpus
+
+    if args.smoke:
+        n_docs, n_requests, max_new = 48, 4, 4
+        preset_names = ["baseline"]
+    else:
+        n_docs, n_requests, max_new = 128, 8, 8
+        preset_names = list(PRESETS)
+    if args.presets:
+        preset_names = [s.strip() for s in args.presets.split(",")]
+    backends = [s.strip() for s in args.backends.split(",")]
+
+    corpus, _topics, make_q = topical_corpus(n_docs, 10, 128, n_topics=4)
+    questions = [make_q(i % 4, q_len=8) for i in range(n_requests)]
+
+    results = {"meta": {
+        "smoke": bool(args.smoke),
+        "jax_backend": jax.default_backend(),
+        "corpus": [int(corpus.shape[0]), int(corpus.shape[1])],
+        "n_requests": n_requests,
+        "retrieval_k": RETRIEVAL_K,
+        "calibration": _scan_calibration(corpus, questions),
+    }, "presets": {}}
+
+    for name in preset_names:
+        schema = PRESETS[name]()
+        results["presets"][name] = {}
+        for backend in backends:
+            t0 = time.perf_counter()
+            row = run_preset(name, schema, backend, corpus, questions,
+                             max_new)
+            row["bench_total_s"] = round(time.perf_counter() - t0, 2)
+            results["presets"][name][backend] = row
+            print(f"{name}/{backend}: qps={row['qps']} "
+                  f"ttft={row['ttft_s']}s tpot={row['tpot_s']}s "
+                  f"recall@{RETRIEVAL_K}={row['recall_at_k_vs_exact']}",
+                  flush=True)
+
+    Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

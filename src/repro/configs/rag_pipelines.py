@@ -12,6 +12,12 @@ from __future__ import annotations
 from repro.core.ragschema import (ENCODER_120M, LLAMA3_1B, MODELS, RAGSchema)
 
 
+def baseline(generative: str = "8B") -> RAGSchema:
+    """Plain retrieve -> prefill -> decode RAG (paper Case I shape); the
+    anchor the serving benchmark measures every optional stage against."""
+    return RAGSchema(generative=MODELS[generative])
+
+
 def multi_query(generative: str = "8B", queries: int = 4) -> RAGSchema:
     """Multi-query fan-out RAG: a small LLM expands every question into
     ``queries`` search variants before hyperscale retrieval."""
@@ -36,6 +42,7 @@ def full_pipeline(generative: str = "70B", queries: int = 2) -> RAGSchema:
 
 
 PRESETS = {
+    "baseline": baseline,
     "multi_query": multi_query,
     "safety_screened": safety_screened,
     "full_pipeline": full_pipeline,

@@ -14,7 +14,7 @@ utilization (paper-measured with open-source ScaNN at 4K-vector tree nodes).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
 
 from repro.core.hardware import CPUHostSpec
@@ -76,6 +76,22 @@ def retrieval_perf(schema: RAGSchema, host: CPUHostSpec, n_servers: int,
     perf = _retrieval(schema.db_vectors, qb, n_servers, q, host)
     return RetrievalPerf(perf.latency, perf.throughput /
                          schema.queries_per_retrieval)
+
+
+def calibrate_host(host: CPUHostSpec, measured_bytes_per_s: float,
+                   cores_used: int = 1) -> CPUHostSpec:
+    """Host spec with the PQ-scan bandwidth replaced by a measurement.
+
+    ``measured_bytes_per_s`` comes from timing a real retrieval backend
+    (:func:`repro.retrieval.backend.measure_scan_bw`); ``cores_used`` is how
+    many cores that measurement saturated (a single-query scan uses one).
+    Every plan the optimizer prices through ``retrieval_perf`` then reflects
+    the measured system instead of the paper's 18 GB/s/core constant.
+    """
+    if measured_bytes_per_s <= 0:
+        raise ValueError("measured_bytes_per_s must be positive")
+    per_core = measured_bytes_per_s / max(cores_used, 1)
+    return replace(host, pq_scan_bw_per_core=per_core)
 
 
 def db_memory_bytes(schema: RAGSchema) -> float:

@@ -379,6 +379,67 @@ def decode_step(params: dict, cache: dict, token: jax.Array,
     return logits, {"k": caches[0], "v": caches[1]}
 
 
+def chunk_extend(params: dict, cache: dict, slot: jax.Array,
+                 tokens: jax.Array, start_pos: jax.Array,
+                 n_valid: jax.Array, cfg: TransformerConfig,
+                 compute_dtype=jnp.bfloat16) -> dict:
+    """Extend ONE pool slot's cache with a chunk of tokens in a single
+    forward (iteration prefill for iterative retrieval, §5.3).
+
+    cache: {"k","v"}: (L, B, S_max, H_kv, D) -- the full slot pool.
+    tokens: (T,) int32, padded to T; only the first ``n_valid`` are real.
+    start_pos: scalar int32 -- the slot's current cache length.
+
+    Chunk token i attends to cache positions <= start_pos + i (the slot's
+    existing prefix plus earlier chunk tokens, whose K/V are written first),
+    so the result matches feeding the tokens one decode step at a time.
+    Padding rows write out of bounds (dropped) and their activations are
+    never read, so one compile per power-of-two bucket serves any chunk
+    length.  Logits are not computed -- appended context is prompt, not
+    generation.
+    """
+    s_max = cache["k"].shape[2]
+    T = tokens.shape[0]
+    embed = cm.maybe_dequant(params["embed"], compute_dtype)
+    x = jnp.take(embed, tokens, axis=0)[None]                 # (1, T, d)
+    offs = jnp.arange(T, dtype=jnp.int32)
+    positions = (start_pos + offs)[None]                      # (1, T)
+    # invalid rows target index s_max -> scatter mode="drop" discards them
+    write_pos = jnp.where(offs < n_valid, start_pos + offs, s_max)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+
+    def layer_fn(x, scanned):
+        lp, kc, vc = scanned                    # kc: (B, S_max, H_kv, D)
+        xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(xn, lp, cfg, positions, compute_dtype)
+        kc = kc.astype(compute_dtype).at[slot, write_pos].set(
+            k_new[0], mode="drop")
+        vc = vc.astype(compute_dtype).at[slot, write_pos].set(
+            v_new[0], mode="drop")
+        kr = cm.repeat_kv(kc[slot][None], cfg.q_per_kv)       # (1, S, H, D)
+        vr = cm.repeat_kv(vc[slot][None], cfg.q_per_kv)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(
+            jnp.float32) * scale
+        mask = jnp.arange(s_max)[None, None, None, :] <= \
+            positions[0][None, None, :, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+        wo = cm.maybe_dequant(lp["wo"], compute_dtype)
+        x = x + (out.reshape(1, T, cfg.n_heads * cfg.d_head)
+                 @ wo).astype(x.dtype)
+        xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_ffn(xn, lp, cfg, compute_dtype)
+        else:
+            h = dense_ffn(xn, lp, compute_dtype, cfg.ffn_type)
+        return x + h, (kc, vc)
+
+    _, caches = jax.lax.scan(
+        layer_fn, x, (params["layers"], cache["k"], cache["v"]))
+    return {"k": caches[0], "v": caches[1]}
+
+
 def make_cache(cfg: TransformerConfig, batch: int, s_max: int,
                dtype=jnp.bfloat16) -> dict:
     shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)

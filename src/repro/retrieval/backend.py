@@ -1,0 +1,163 @@
+"""Pluggable retrieval backends for the serving engine (paper §2, §4b).
+
+A backend owns the database-side half of retrieval: it takes already-encoded
+query vectors and returns (scores, ids).  ``RAGEngine.retrieve`` and the
+``RetrieveExecutor`` consume the protocol only, so swapping exact kNN for
+IVF-PQ (or anything else) is an ``EngineConfig`` change, not an engine edit.
+
+Score convention: HIGHER is better for every backend (exact kNN returns
+similarities; IVF-PQ returns negated ADC distances), so callers can rank
+uniformly.
+
+``IVFPQBackend`` builds an :class:`repro.retrieval.ivf_pq.IVFPQIndex` from
+the database vectors at construction and routes the ADC scan through the
+``pq_scan`` Pallas kernel when one is available (TPU; the kernel falls back
+to interpret mode on CPU, which is correct but slow, so the default only
+engages it on a real TPU backend).  Because the engine's ``tr.encode``
+embeddings are L2-normalized, the backend's squared-L2 ranking is
+equivalent to the exact backend's cosine ranking.
+
+``measure_scan_bw`` times a backend's scan over a query batch and converts
+it to bytes/s, which :func:`repro.core.retrieval_model.calibrate_host`
+turns into an updated analytical host spec -- the hook that lets the
+optimizer's retrieval cost model be calibrated against the measured system.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.exact import knn
+from repro.retrieval.ivf_pq import IVFPQIndex, build_index, search
+
+
+@runtime_checkable
+class RetrievalBackend(Protocol):
+    """Search interface the engine consumes."""
+    name: str
+
+    def search(self, queries: jax.Array, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """queries: (Q, D) vectors -> (scores (Q, k), ids (Q, k)); higher
+        score is better."""
+        ...
+
+    @property
+    def bytes_per_query(self) -> float:
+        """Database bytes scanned per query vector (cost-model units)."""
+        ...
+
+
+class ExactBackend:
+    """Brute-force scan (paper Case II: no ANN index)."""
+    name = "exact"
+
+    def __init__(self, db_vectors: np.ndarray, metric: str = "cosine"):
+        self.db = jnp.asarray(db_vectors)
+        self.metric = metric
+
+    def search(self, queries: jax.Array, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+        scores, idx = knn(queries, self.db, k=k, metric=self.metric)
+        return np.asarray(scores), np.asarray(idx)
+
+    @property
+    def bytes_per_query(self) -> float:
+        n, d = self.db.shape
+        return float(n * d * self.db.dtype.itemsize)
+
+
+def _default_n_lists(n_vectors: int) -> int:
+    """sqrt(N) coarse lists (balanced 2-level scan), clamped to [1, N]."""
+    return max(1, min(n_vectors, int(round(n_vectors ** 0.5))))
+
+
+def _default_n_subq(dim: int, target: int = 8) -> int:
+    """Largest divisor of the vector dim that is <= target."""
+    for s in range(min(target, dim), 0, -1):
+        if dim % s == 0:
+            return s
+    return 1
+
+
+class IVFPQBackend:
+    """IVF-PQ approximate search over an index built at construction.
+
+    ``use_kernel=None`` auto-selects: the Pallas pq_scan kernel on TPU,
+    the jnp reference scan elsewhere (interpret mode is correct on CPU but
+    far slower than XLA's fused gather).
+    """
+    name = "ivfpq"
+
+    def __init__(self, db_vectors: np.ndarray, nprobe: int = 8,
+                 n_lists: int | None = None, n_subq: int | None = None,
+                 use_kernel: bool | None = None, seed: int = 0):
+        vecs = jnp.asarray(db_vectors, jnp.float32)
+        n, d = vecs.shape
+        if n_lists is None:
+            n_lists = _default_n_lists(n)
+        if n_subq is None:
+            n_subq = _default_n_subq(d)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.use_kernel = bool(use_kernel)
+        self.nprobe = max(1, min(nprobe, n_lists))
+        self.index: IVFPQIndex = build_index(
+            jax.random.PRNGKey(seed), vecs, n_lists=n_lists, n_subq=n_subq)
+
+    def search(self, queries: jax.Array, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Note: when the probed lists hold fewer than k real vectors the
+        id tail is -1 (IVF padding) with score -inf; consumers must drop
+        negative ids rather than index a corpus with them."""
+        dists, ids = search(self.index, jnp.asarray(queries, jnp.float32),
+                            nprobe=self.nprobe, k=k,
+                            use_kernel=self.use_kernel)
+        return -np.asarray(dists), np.asarray(ids)
+
+    @property
+    def bytes_per_query(self) -> float:
+        """Coarse f32 centroid scan + PQ codes of the probed lists."""
+        idx = self.index
+        coarse = idx.n_lists * idx.centroids.shape[1] * 4
+        list_len = idx.list_ids.shape[1]
+        return float(coarse + self.nprobe * list_len * idx.n_subq)
+
+
+BACKENDS = {"exact": ExactBackend, "ivfpq": IVFPQBackend}
+
+
+def make_backend(name: str, db_vectors: np.ndarray, *, nprobe: int = 8,
+                 use_pq_kernel: bool | None = None,
+                 seed: int = 0) -> RetrievalBackend:
+    """EngineConfig-level factory: name + knobs -> backend instance."""
+    if name == "exact":
+        return ExactBackend(db_vectors)
+    if name == "ivfpq":
+        return IVFPQBackend(db_vectors, nprobe=nprobe,
+                            use_kernel=use_pq_kernel, seed=seed)
+    raise ValueError(f"unknown retrieval backend {name!r}; "
+                     f"known: {sorted(BACKENDS)}")
+
+
+def measure_scan_bw(backend: RetrievalBackend, queries: jax.Array,
+                    k: int = 10, iters: int = 3) -> float:
+    """Measured scan throughput (bytes/s) of one backend on this host.
+
+    Feeds :func:`repro.core.retrieval_model.calibrate_host`, replacing the
+    paper's 18 GB/s/core constant with a number from the running system.
+    """
+    queries = jnp.asarray(queries)
+    k = max(1, k)
+    backend.search(queries, k)                       # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        backend.search(queries, k)
+    dt = (time.perf_counter() - t0) / iters
+    total_bytes = backend.bytes_per_query * queries.shape[0]
+    return total_bytes / max(dt, 1e-9)

@@ -133,15 +133,24 @@ def search(index: IVFPQIndex, queries: jax.Array, nprobe: int = 8,
     return -neg, jnp.take_along_axis(flat_i, pos, axis=1)
 
 
+def overlap_recall(approx_ids, exact_ids) -> float:
+    """Fraction of the exact ids the approximate search recovered.
+
+    Row-wise set overlap over (Q, k) id arrays (or equal-length id lists);
+    negative ids in the approximate results -- IVF list padding -- never
+    count as hits.
+    """
+    a = np.asarray(approx_ids)
+    e = np.asarray(exact_ids)
+    hits = sum(len({int(i) for i in ar if i >= 0} & {int(i) for i in er})
+               for ar, er in zip(a, e))
+    return hits / e.size
+
+
 def recall_at_k(index: IVFPQIndex, vectors: jax.Array, queries: jax.Array,
                 k: int = 10, nprobe: int = 8) -> float:
     """Recall@k against exact L2 ground truth."""
     from repro.retrieval.exact import knn
     _, approx = search(index, queries, nprobe=nprobe, k=k)
     _, exact_ids = knn(queries, vectors, k=k)
-    hits = 0
-    a = np.asarray(approx)
-    e = np.asarray(exact_ids)
-    for i in range(a.shape[0]):
-        hits += len(set(a[i].tolist()) & set(e[i].tolist()))
-    return hits / (a.shape[0] * k)
+    return overlap_recall(approx, exact_ids)

@@ -12,15 +12,39 @@ The pre-prefill pipeline is not hard-coded: at construction the engine asks
 the stage registry (``repro.core.stage_registry``) for StageExecutor
 objects -- every registered StageSpec with an active ``make_executor`` for
 this engine contributes one, in registry order.  The engine keeps only the
-shared infrastructure (corpus + database embeddings, KV-cache pool, the
-slot-based decode loop) and the two decode-anchored mechanisms (prefill,
-continuous batching); everything else is composable.
+shared infrastructure (corpus + database embeddings, retrieval backend,
+KV-cache pool, the slot-based decode loop) and the two decode-anchored
+mechanisms (prefill, continuous batching); everything else is composable.
+
+Hot-path design:
+
+* Retrieval goes through a pluggable backend
+  (``repro.retrieval.backend``): exact kNN or an IVF-PQ index built at
+  construction, selected purely by ``EngineConfig.retrieval_backend``.
+* The decode step is fused: argmax sampling and the active-slot cache
+  merge run inside ONE jitted call with the cache donated to XLA, so each
+  token costs a single dispatch and a single (B,)-token device->host
+  transfer -- no host-side argmax, no full cache rebuild.  The pre-fusion
+  path is kept behind ``fused_decode=False`` for parity testing.
+* Iteratively retrieved context is appended in bucketed chunks
+  (``tr.chunk_extend``): one jitted forward per power-of-two chunk bucket
+  writes the slot's cache prefix directly, replacing the one-jit-per-token
+  loop.
 
 The decode loop is slot-based (fixed shapes for XLA) with Orca-style
 continuous batching: finished sequences free their slot and queued requests
 are admitted with a fresh prefill.  Prompt lengths are bucketed to powers
 of two and each bucket's prefill is jit-compiled once, so compile count is
 bounded by the number of distinct buckets.
+
+``metrics`` counts the transfers the hot path pays: ``host_syncs`` (the
+device->host copies made by the engine's own primitives -- one per prefill
+first-token fetch, one per stepping decode step, one per ``retrieve``
+batch; executors' internal transfers are not counted), ``decode_host_syncs``
+(the decode loop's share -- exactly one per stepping decode step when
+fused), and ``cache_copy_bytes`` (bytes of whole-cache device copies spent
+merging decode results -- zero when fused, two full caches per step
+otherwise).
 """
 
 from __future__ import annotations
@@ -35,9 +59,14 @@ import numpy as np
 
 from repro.core.stage_registry import REGISTRY
 from repro.models import transformer as tr
-from repro.retrieval.exact import knn
+from repro.retrieval.backend import make_backend
 from repro.serving.kv_cache import KVCachePool
 from repro.serving.request import Request, State
+
+
+def bucket_len(n: int, floor: int = 8) -> int:
+    """Next power of two >= n (shared prefill / chunk-append bucketing)."""
+    return int(2 ** np.ceil(np.log2(max(n, floor))))
 
 
 @dataclass
@@ -55,6 +84,12 @@ class EngineConfig:
     fanout_queries: int = 1                # >1 enables multi-query fan-out
     fanout_tokens: int = 4                 # generated tokens per variant
     safety_threshold: float | None = None  # drop docs scoring below this
+    # retrieval backend (repro.retrieval.backend)
+    retrieval_backend: str = "exact"       # "exact" | "ivfpq"
+    nprobe: int = 8                        # IVF lists probed per query
+    use_pq_kernel: bool | None = None      # None = Pallas kernel on TPU only
+    # decode-step fusion (False keeps the pre-fusion path for parity tests)
+    fused_decode: bool = True
 
 
 @dataclass
@@ -83,11 +118,21 @@ class RAGEngine:
         self.pending_retrievals: list[Request] = []
         self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
                         "retrieval_batches": 0, "prefills": 0,
-                        "prefill_compiles": 0}
+                        "prefill_compiles": 0, "append_compiles": 0,
+                        "host_syncs": 0, "decode_host_syncs": 0,
+                        "cache_copy_bytes": 0}
         self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
+        self._fused_decode_jit = jax.jit(
+            partial(self._fused_decode, cfg=self.gen.cfg),
+            donate_argnums=(1,))
+        self._encode_jit = jax.jit(partial(tr.encode, cfg=self.enc.cfg))
         self._prefill_jit = {}                   # bucket -> jitted prefill
+        self._append_jit = {}                    # bucket -> jitted extend
         # database embeddings (the paper's offline encode step)
         self.db_vectors = np.asarray(self._embed_batched(self.corpus))
+        self.backend = make_backend(cfg.retrieval_backend, self.db_vectors,
+                                    nprobe=cfg.nprobe,
+                                    use_pq_kernel=cfg.use_pq_kernel)
         # executable pipeline, derived from the stage registry
         self.executors = REGISTRY.engine_executors(self)
 
@@ -97,17 +142,32 @@ class RAGEngine:
         return any(ex.name == name for ex in self.executors)
 
     def _embed_batched(self, tokens: np.ndarray, bs: int = 32) -> jnp.ndarray:
+        """Encode rows in fixed-size batches through one jitted encoder.
+
+        The final ragged chunk is padded to ``bs`` rows so every call hits
+        the same compiled shape; the pad rows are sliced off afterwards
+        (each row embeds independently, so padding cannot perturb the
+        valid rows)."""
+        tokens = np.asarray(tokens)
         outs = []
         for i in range(0, tokens.shape[0], bs):
-            chunk = jnp.asarray(tokens[i:i + bs])
-            h = tr.encode(self.enc.params, chunk, self.enc.cfg)
-            outs.append(h)
+            chunk = tokens[i:i + bs]
+            valid = chunk.shape[0]
+            if valid < bs:
+                chunk = np.pad(chunk, ((0, bs - valid), (0, 0)))
+            h = self._encode_jit(self.enc.params, jnp.asarray(chunk))
+            outs.append(h[:valid])
         return jnp.concatenate(outs)
 
     def retrieve(self, queries: np.ndarray, k: int) -> np.ndarray:
-        """queries: (B, T) -> (B, k) doc indices."""
+        """queries: (B, T) -> (B, k) doc indices via the retrieval backend.
+
+        Approximate backends may pad the id tail with -1 when the probed
+        lists run out of candidates; callers must drop negative ids before
+        indexing the corpus."""
         qv = self._embed_batched(queries)
-        _, idx = knn(qv, jnp.asarray(self.db_vectors), k=k, metric="cosine")
+        _, idx = self.backend.search(qv, k)
+        self.metrics["host_syncs"] += 1
         return np.asarray(idx)
 
     # ---------------- admission / prefill ----------------------------------
@@ -130,7 +190,7 @@ class RAGEngine:
         prefix is installed in the slot."""
         prompt = req.prompt
         length = len(prompt)
-        bucket = int(2 ** np.ceil(np.log2(max(length, 8))))
+        bucket = bucket_len(length)
         fn = self._prefill_jit.get(bucket)
         if fn is None:
             fn = jax.jit(partial(tr.forward, cfg=self.gen.cfg,
@@ -143,6 +203,7 @@ class RAGEngine:
         self.pool.write_prefix(slot, cache, length)
         tok = int(jnp.argmax(logits[0, length - 1,
                              :self.gen.cfg.vocab_size]))
+        self.metrics["host_syncs"] += 1
         req.output.append(tok)
         req.t_first_token = time.monotonic()
         req.state = State.DECODE
@@ -164,20 +225,28 @@ class RAGEngine:
     def _append_tokens(self, slot: int, tokens: np.ndarray) -> None:
         """Append retrieved content into a slot's cache (iteration prefill).
 
-        Correct-and-simple chunked append: feed tokens one step at a time
-        through the decode path (logits discarded)."""
-        for t in tokens:
-            token_vec = np.zeros(self.pool.n_slots, np.int32)
-            token_vec[slot] = int(t)
-            logits, cache = self._decode_jit(
-                self.gen.params, self.pool.cache,
-                jnp.asarray(token_vec), self.pool.positions())
-            # only this slot's cache row advanced meaningfully; other slots
-            # wrote at their current pos and will overwrite on next step
-            self.pool.cache = jax.tree_util.tree_map(
-                lambda new, old: old.at[:, slot].set(new[:, slot]),
-                cache, self.pool.cache)
-            self.pool.lengths[slot] += 1
+        Bucketed chunk append: the tokens are padded to the next power-of-
+        two bucket and one jitted ``tr.chunk_extend`` forward writes the
+        slot's cache prefix directly (cache donated, pad rows dropped), so
+        an n-token append costs one dispatch instead of n decode steps."""
+        t = len(tokens)
+        if t == 0:
+            return
+        bucket = bucket_len(t)
+        fn = self._append_jit.get(bucket)
+        if fn is None:
+            fn = jax.jit(partial(tr.chunk_extend, cfg=self.gen.cfg),
+                         donate_argnums=(1,))
+            self._append_jit[bucket] = fn
+            self.metrics["append_compiles"] += 1
+        padded = np.zeros(bucket, np.int32)
+        padded[:t] = tokens
+        self.pool.cache = fn(
+            self.gen.params, self.pool.cache,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(padded),
+            jnp.asarray(self.pool.lengths[slot], jnp.int32),
+            jnp.asarray(t, jnp.int32))
+        self.pool.lengths[slot] += t
 
     def _dispatch_iterative(self, force: bool = False) -> None:
         r = self.cfg.retrieval_batch
@@ -191,6 +260,7 @@ class RAGEngine:
             ids = self.retrieve(qs, 1)
             self.metrics["retrieval_batches"] += 1
             for req, docs in zip(batch, ids):
+                docs = docs[docs >= 0]          # drop ANN padding ids
                 # executors may screen iteratively retrieved content before
                 # it reaches the cache (same events the analytical
                 # decode_stall prices)
@@ -207,6 +277,22 @@ class RAGEngine:
                         self._append_tokens(req.slot, new_ctx[:room])
                 req.state = State.DECODE
 
+    @staticmethod
+    def _fused_decode(params, cache, token_vec, positions, step_mask, *,
+                      cfg):
+        """One fused decode step: forward + argmax + active-slot cache
+        merge in a single XLA program.  ``step_mask`` (B,) bool selects the
+        slots that actually decoded; other slots keep their old cache rows
+        (the step wrote a garbage token at their current position).  The
+        cache argument is donated, so the merge is an in-place update."""
+        logits, new_cache = tr.decode_step(params, cache, token_vec,
+                                           positions, cfg)
+        tokens = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        mask = step_mask[None, :, None, None, None]     # (L, B, S, H, D)
+        merged = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(mask, new, old), new_cache, cache)
+        return tokens.astype(jnp.int32), merged
+
     def _decode_step(self) -> None:
         token_vec = np.zeros(self.pool.n_slots, np.int32)
         stepping = []
@@ -218,16 +304,30 @@ class RAGEngine:
         self.metrics["idle_slot_steps"] += self.pool.n_slots - len(stepping)
         if not stepping:
             return
-        logits, cache = self._decode_jit(
-            self.gen.params, self.pool.cache, jnp.asarray(token_vec),
-            self.pool.positions())
-        new_tokens = np.asarray(
-            jnp.argmax(logits[:, :self.gen.cfg.vocab_size], axis=-1))
-        # keep cache rows only for slots that actually decoded
-        self.pool.cache = jax.tree_util.tree_map(
-            lambda new, old: old.at[:, np.asarray(stepping)].set(
-                new[:, np.asarray(stepping)]),
-            cache, self.pool.cache)
+        if self.cfg.fused_decode:
+            step_mask = np.zeros(self.pool.n_slots, bool)
+            step_mask[stepping] = True
+            toks, self.pool.cache = self._fused_decode_jit(
+                self.gen.params, self.pool.cache, jnp.asarray(token_vec),
+                self.pool.positions(), jnp.asarray(step_mask))
+            new_tokens = np.asarray(toks)            # the step's one sync
+        else:
+            # pre-fusion path (kept for parity tests): host-side argmax
+            # plus a full tree_map cache rebuild per step
+            logits, cache = self._decode_jit(
+                self.gen.params, self.pool.cache, jnp.asarray(token_vec),
+                self.pool.positions())
+            new_tokens = np.asarray(
+                jnp.argmax(logits[:, :self.gen.cfg.vocab_size], axis=-1))
+            # keep cache rows only for slots that actually decoded
+            self.pool.cache = jax.tree_util.tree_map(
+                lambda new, old: old.at[:, np.asarray(stepping)].set(
+                    new[:, np.asarray(stepping)]),
+                cache, self.pool.cache)
+            self.metrics["cache_copy_bytes"] += sum(
+                v.nbytes for v in self.pool.cache.values())
+        self.metrics["host_syncs"] += 1
+        self.metrics["decode_host_syncs"] += 1
         self.pool.advance(stepping)
         done_slots = []
         for slot in stepping:

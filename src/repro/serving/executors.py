@@ -96,7 +96,7 @@ class RetrieveExecutor:
         for rank in range(k):
             for cand in per_query:
                 d = int(cand[rank])
-                if d not in seen:
+                if d >= 0 and d not in seen:    # skip ANN padding ids
                     seen.add(d)
                     ids.append(d)
         req.candidate_ids = np.asarray(ids[:k], np.int64)

@@ -125,3 +125,26 @@ def test_decode_attention_length_masking():
     vc2 = vc.at[:, 40:].set(-99.0)
     out2 = decode_attention(q, kc2, vc2, lens, block_k=32)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_pq_scan_at_ivfpq_search_shapes():
+    """Kernel-vs-ref equivalence at the exact flattened (Q*P, LL, S) shapes
+    ``ivf_pq.search`` emits when routing through the kernel."""
+    from repro.retrieval.ivf_pq import adc_tables, build_index
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (96, 32))
+    vecs = vecs / jnp.linalg.norm(vecs, axis=-1, keepdims=True)
+    idx = build_index(jax.random.PRNGKey(1), vecs, n_lists=10, n_subq=8)
+    queries = vecs[:4]
+    nprobe = 5
+    c2 = jnp.sum(idx.centroids ** 2, axis=-1)
+    coarse = c2[None] - 2.0 * queries @ idx.centroids.T
+    _, probe = jax.lax.top_k(-coarse, nprobe)
+    tables = adc_tables(idx, queries, jnp.take(idx.centroids, probe, axis=0))
+    codes = jnp.take(idx.list_codes, probe, axis=0)
+    q, p, ll, s = codes.shape
+    lut = tables.reshape(q * p, s, 256)
+    flat = codes.reshape(q * p, ll, s)
+    np.testing.assert_allclose(np.asarray(pq_scan(lut, flat)),
+                               np.asarray(pq_scan_ref(lut, flat)),
+                               rtol=1e-4, atol=1e-4)

@@ -82,3 +82,58 @@ def test_search_with_pallas_kernel_matches_ref(clustered):
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
                                atol=1e-4)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# Pluggable backends (serving-engine retrieval protocol)
+# ---------------------------------------------------------------------------
+
+def test_exact_backend_matches_knn(clustered):
+    from repro.retrieval.backend import ExactBackend, RetrievalBackend
+    b = ExactBackend(np.asarray(clustered), metric="l2")
+    assert isinstance(b, RetrievalBackend)
+    scores, ids = b.search(clustered[:8], k=3)
+    np.testing.assert_array_equal(ids[:, 0], np.arange(8))
+    # higher-is-better contract: self-match scores first
+    assert (scores[:, 0] >= scores[:, 1]).all()
+
+
+def test_ivfpq_backend_recall_vs_exact(clustered):
+    from repro.retrieval.backend import ExactBackend, IVFPQBackend
+    from repro.retrieval.ivf_pq import overlap_recall
+    vecs = np.asarray(clustered)
+    exact = ExactBackend(vecs, metric="l2")
+    approx = IVFPQBackend(vecs, nprobe=16, n_lists=16)
+    qs = clustered[:32]
+    _, e_ids = exact.search(qs, k=5)
+    _, a_ids = approx.search(qs, k=5)
+    # top-1 (the query vector itself) always survives quantization
+    assert float(np.mean(a_ids[:, 0] == e_ids[:, 0])) > 0.9
+    # deeper ranks lose some overlap to PQ error on this dense fixture
+    # (matches the 0.6 regime of test_ivfpq_recall_improves_with_nprobe)
+    assert overlap_recall(a_ids, e_ids) > 0.6
+
+
+def test_make_backend_factory(clustered):
+    from repro.retrieval.backend import make_backend
+    vecs = np.asarray(clustered[:128])
+    assert make_backend("exact", vecs).name == "exact"
+    b = make_backend("ivfpq", vecs, nprobe=100)   # clamps to n_lists
+    assert b.name == "ivfpq"
+    assert b.nprobe <= b.index.n_lists
+    with pytest.raises(ValueError):
+        make_backend("faiss", vecs)
+
+
+def test_measure_scan_bw_and_calibrate_host(clustered):
+    from repro.core.hardware import EPYC_MILAN
+    from repro.core.retrieval_model import calibrate_host
+    from repro.retrieval.backend import IVFPQBackend, measure_scan_bw
+    b = IVFPQBackend(np.asarray(clustered), nprobe=4, n_lists=16)
+    bw = measure_scan_bw(b, clustered[:16], k=5, iters=1)
+    assert bw > 0
+    host = calibrate_host(EPYC_MILAN, bw, cores_used=2)
+    assert host.pq_scan_bw_per_core == pytest.approx(bw / 2)
+    assert host.mem_bw == EPYC_MILAN.mem_bw     # only the scan bw changes
+    with pytest.raises(ValueError):
+        calibrate_host(EPYC_MILAN, 0.0)

@@ -1,0 +1,44 @@
+"""The serving benchmark harness itself is CI-covered: ``--smoke`` runs the
+baseline preset on a tiny corpus and must emit a well-formed
+BENCH_serving.json (QPS/TTFT/TPOT + recall + hot-path metrics)."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.slow        # full engine build + jit in a subprocess
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_serving_bench_smoke(tmp_path):
+    out = tmp_path / "BENCH_serving.json"
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "serving_bench.py"),
+         "--smoke", "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+
+    data = json.loads(out.read_text())
+    assert data["meta"]["smoke"] is True
+    assert data["meta"]["calibration"]["ivfpq_scan_bytes_per_s"] > 0
+    presets = data["presets"]
+    assert "baseline" in presets
+    for backend in ("exact", "ivfpq"):
+        row = presets["baseline"][backend]
+        assert row["n_done"] == row["n_requests"] > 0
+        assert row["qps"] > 0
+        assert row["ttft_s"] > 0 and row["tpot_s"] > 0
+        assert 0.0 <= row["recall_at_k_vs_exact"] <= 1.0
+        # fused decode hot path: <= 1 sync per step, no cache copies
+        m = row["metrics"]
+        assert m["decode_host_syncs"] <= m["decode_steps"]
+        assert m["cache_copy_bytes"] == 0
+    # the approximate backend must stay close to exact on the tiny corpus
+    assert presets["baseline"]["ivfpq"]["recall_at_k_vs_exact"] >= 0.8

@@ -154,3 +154,41 @@ def test_rope_partial_fraction():
     np.testing.assert_allclose(np.asarray(half[..., 8:]),
                                np.asarray(x[..., 8:]), atol=0)
     assert float(jnp.abs(full[..., 8:] - x[..., 8:]).max()) > 1e-4
+
+
+def test_chunk_extend_matches_sequential_decode(params):
+    """Bucketed cache append == feeding the tokens one decode step at a
+    time (the engine's pre-batching iteration-prefill semantics), with pad
+    rows dropped and other slots untouched."""
+    n_slots, s_max, slot, plen = 3, 32, 1, 5
+    cache = tr.make_cache(TINY, n_slots, s_max)
+    _, _, pc = tr.forward(params, _toks(1, plen), TINY, collect_cache=True)
+    cache = {k: cache[k].at[:, slot, :plen].set(pc[k][:, 0]) for k in cache}
+    tokens = np.asarray([7, 11, 3, 9, 22], np.int32)
+
+    seq = dict(cache)
+    for i, t in enumerate(tokens):
+        tv = np.zeros(n_slots, np.int32)
+        tv[slot] = t
+        ps = np.zeros(n_slots, np.int32)
+        ps[slot] = plen + i
+        _, new = tr.decode_step(params, seq, jnp.asarray(tv),
+                                jnp.asarray(ps), TINY)
+        seq = jax.tree_util.tree_map(
+            lambda n_, o: o.at[:, slot].set(n_[:, slot]), new, seq)
+
+    padded = np.zeros(8, np.int32)           # bucket 8 > 5 valid tokens
+    padded[:len(tokens)] = tokens
+    chunk = tr.chunk_extend(params, cache, jnp.int32(slot),
+                            jnp.asarray(padded), jnp.int32(plen),
+                            jnp.int32(len(tokens)), TINY)
+    end = plen + len(tokens)
+    for k in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(chunk[k][:, slot, :end], np.float32),
+            np.asarray(seq[k][:, slot, :end], np.float32),
+            rtol=2e-2, atol=2e-2)
+        # pad rows were dropped, untouched slots stayed zero
+        assert float(jnp.abs(chunk[k][:, slot, end:]).max()) == 0.0
+        assert float(jnp.abs(chunk[k][:, 0]).max()) == 0.0
+        assert float(jnp.abs(chunk[k][:, 2]).max()) == 0.0
