@@ -3,20 +3,29 @@
 
 Per preset x retrieval backend it reports QPS, TTFT, TPOT, tokens/s,
 retrieval recall@k vs the exact backend, and the engine's hot-path metrics
-(host syncs, cache-copy bytes), so successive PRs have a perf trajectory
-(RAGPulse-style: measure the pipeline, not just the kernels).  It also
-times the IVF-PQ scan and emits the calibrated per-core scan bandwidth the
-analytical retrieval model (``core/retrieval_model.calibrate_host``) can
-consume in place of the paper's 18 GB/s constant.
+(host syncs, cache-copy bytes, per-stage wall time), so successive PRs
+have a perf trajectory (RAGPulse-style: measure the pipeline, not just the
+kernels).  It also times the IVF-PQ scan and emits the calibrated per-core
+scan bandwidth the analytical retrieval model
+(``core/retrieval_model.calibrate_host``) can consume in place of the
+paper's 18 GB/s constant.
 
-Each preset's RAGSchema selects which pipeline stages run; the models
-themselves are tiny stand-ins (this container benches the serving
-machinery, not model FLOPs -- paper-scale numbers come from the analytical
-cost model).
+Engine configuration is DERIVED from each preset's RAGSchema
+(``EngineConfig.from_schema``) -- the schema picks the stages, this
+harness only applies test-scale clamps (tiny stand-in models bench the
+serving machinery, not model FLOPs; paper-scale numbers come from the
+analytical cost model).
 
-Usage:
+Modes:
     PYTHONPATH=src python benchmarks/serving_bench.py            # full
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
+    ... --optimize         # schema -> enumerate_plans -> best_qps_per_chip
+                           #   -> ServingPlan -> RAGServer.from_plan ->
+                           #   open-loop Poisson traffic (the paper's
+                           #   "optimize then serve" story end to end)
+    ... --compare PREV.json [--tolerance 0.25]
+                           # nonzero exit on QPS/TPOT regression vs a
+                           # previous BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -24,7 +33,9 @@ from __future__ import annotations
 import argparse
 import json
 import statistics
+import sys
 import time
+from dataclasses import replace
 from pathlib import Path
 
 import numpy as np
@@ -56,18 +67,25 @@ def _components(schema, vocab: int):
     return comps
 
 
+def _scale_clamps(cfg):
+    """Test-scale clamps on schema-derived sizes: tiny stand-in models
+    keep PR-over-PR numbers comparable (3 rewrite tokens, 2 fan-out
+    tokens, 6 rerank candidates -- the workload PR 3 pinned)."""
+    return replace(cfg,
+                   rewrite_tokens=min(cfg.rewrite_tokens, 3),
+                   fanout_tokens=min(cfg.fanout_tokens, 2),
+                   rerank_candidates=min(cfg.rerank_candidates, 6))
+
+
 def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int):
+    """Stage enabling comes from the schema via the registry
+    (EngineConfig.from_schema); only deployment/test-scale knobs are set
+    here."""
     from repro.serving.engine import EngineConfig
-    fanout = (schema.queries_per_retrieval
-              if schema.fanout_model is not None else 1)
-    return EngineConfig(
-        decode_slots=4, s_max=s_max, retrieval_k=RETRIEVAL_K,
-        max_new_tokens=max_new_tokens,
-        rewrite_tokens=3 if schema.rewriter is not None else 0,
-        rerank=schema.reranker is not None, rerank_candidates=6,
-        fanout_queries=fanout, fanout_tokens=2,
-        safety_threshold=0.0 if schema.safety_model is not None else None,
-        retrieval_backend=backend)
+    cfg = EngineConfig.from_schema(
+        schema, decode_slots=4, s_max=s_max, retrieval_k=RETRIEVAL_K,
+        max_new_tokens=max_new_tokens, retrieval_backend=backend)
+    return _scale_clamps(cfg)
 
 
 def _recall_vs_exact(engine, questions) -> float:
@@ -117,6 +135,77 @@ def run_preset(name: str, schema, backend: str, corpus, questions,
     }
 
 
+def run_optimized(name: str, schema, corpus, questions, max_new_tokens: int,
+                  rate_qps: float) -> dict:
+    """The closed loop the paper promises, end to end: RAGO searches the
+    schema, the winning PlanPoint becomes a ServingPlan, the plan deploys
+    as a RAGServer, and open-loop Poisson traffic streams through it."""
+    from repro.core.hardware import SystemConfig, XPU_C
+    from repro.core.serving_plan import ServingPlan
+    from repro.serving.server import RAGServer, poisson_offsets
+
+    system = SystemConfig(n_servers=4, xpu=XPU_C)     # small 16-XPU slice
+    t0 = time.perf_counter()
+    plan = ServingPlan.optimize(schema, system)
+    search_s = time.perf_counter() - t0
+
+    comps = _components(schema, vocab=128)
+    server = RAGServer.from_plan(
+        plan, comps["generative"], comps["encoder"], corpus,
+        rewriter=comps.get("rewriter"), reranker=comps.get("reranker"),
+        safety=comps.get("safety"),
+        # test-scale deployment clamps (plan decode batches target real
+        # XPUs, not this CPU container)
+        decode_slots=4, s_max=128, retrieval_k=RETRIEVAL_K,
+        max_new_tokens=max_new_tokens)
+    server.engine.cfg = _scale_clamps(server.engine.cfg)
+    offsets = poisson_offsets(rate_qps, len(questions), seed=0)
+    t0 = time.perf_counter()
+    server.replay(questions, offsets)
+    wall = time.perf_counter() - t0
+    return {
+        "plan": plan.describe(),
+        "predicted_qps": round(plan.predicted["qps"], 3),
+        "predicted_ttft_s": round(plan.predicted["ttft"], 5),
+        "search_s": round(search_s, 3),
+        "offered_qps": rate_qps,
+        "replay_wall_s": round(wall, 4),
+        **{k: (round(v, 5) if isinstance(v, float) else v)
+           for k, v in server.summary().items()},
+    }
+
+
+def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
+    """QPS/TPOT regressions of ``cur`` vs a previous BENCH_serving.json.
+
+    For every preset x backend present in BOTH files: QPS must not drop
+    more than ``tolerance`` (fractional), TPOT must not grow more than
+    ``tolerance``.  Returns human-readable regression strings (empty ==
+    pass)."""
+    regressions = []
+    for preset, backends in prev.get("presets", {}).items():
+        for backend, old in backends.items():
+            new = cur.get("presets", {}).get(preset, {}).get(backend)
+            if new is None:
+                regressions.append(f"{preset}/{backend}: missing from "
+                                   f"current run")
+                continue
+            if old.get("qps") and new.get("qps") is not None:
+                floor = old["qps"] * (1.0 - tolerance)
+                if new["qps"] < floor:
+                    regressions.append(
+                        f"{preset}/{backend}: qps {new['qps']} < "
+                        f"{floor:.3f} (prev {old['qps']}, tol {tolerance})")
+            if old.get("tpot_s") and new.get("tpot_s") is not None:
+                ceil = old["tpot_s"] * (1.0 + tolerance)
+                if new["tpot_s"] > ceil:
+                    regressions.append(
+                        f"{preset}/{backend}: tpot {new['tpot_s']}s > "
+                        f"{ceil:.5f}s (prev {old['tpot_s']}s, "
+                        f"tol {tolerance})")
+    return regressions
+
+
 def _scan_calibration(corpus, questions) -> dict:
     """Measured backend scan throughput -> calibrated analytical host."""
     import jax
@@ -153,6 +242,16 @@ def main(argv=None) -> dict:
     p.add_argument("--presets", default=None,
                    help="comma-separated preset names (default: all)")
     p.add_argument("--backends", default="exact,ivfpq")
+    p.add_argument("--optimize", action="store_true",
+                   help="also run schema -> plan -> RAGServer.from_plan "
+                        "with open-loop Poisson traffic per preset")
+    p.add_argument("--rate", type=float, default=2.0,
+                   help="offered Poisson rate (QPS) for --optimize")
+    p.add_argument("--compare", default=None, metavar="PREV.json",
+                   help="exit nonzero on QPS/TPOT regression vs a previous "
+                        "BENCH_serving.json")
+    p.add_argument("--tolerance", type=float, default=0.25,
+                   help="fractional QPS/TPOT tolerance for --compare")
     args = p.parse_args(argv)
 
     import jax
@@ -196,8 +295,30 @@ def main(argv=None) -> dict:
                   f"recall@{RETRIEVAL_K}={row['recall_at_k_vs_exact']}",
                   flush=True)
 
+    if args.optimize:
+        results["optimized"] = {}
+        for name in preset_names:
+            row = run_optimized(name, PRESETS[name](), corpus, questions,
+                                max_new, args.rate)
+            results["optimized"][name] = row
+            print(f"{name}/optimized: {row['plan']}\n"
+                  f"  open-loop @ {args.rate} QPS offered: "
+                  f"served qps={row['qps']} ttft={row['ttft_s']}s "
+                  f"({row['n_done']}/{row['n_submitted']} done)",
+                  flush=True)
+
     Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")
+
+    if args.compare:
+        prev = json.loads(Path(args.compare).read_text())
+        regressions = compare_results(results, prev, args.tolerance)
+        if regressions:
+            print(f"PERF REGRESSION vs {args.compare}:", file=sys.stderr)
+            for r in regressions:
+                print(f"  {r}", file=sys.stderr)
+            sys.exit(1)
+        print(f"no regression vs {args.compare} (tol {args.tolerance})")
     return results
 
 

@@ -1,13 +1,15 @@
-"""Registry-extended RAG pipelines: stages the paper never enumerated
-(multi-query fan-out, encoder safety filter) become searchable and
-executable purely through StageSpec registry entries.
+"""Registry-extended RAG pipelines, searched AND deployed: stages the paper
+never enumerated (multi-query fan-out, encoder safety filter) become
+searchable and executable purely through StageSpec registry entries, and
+the optimizer's winning schedule deploys as a real streaming server --
+the schema -> plan -> server loop in one script.
 
 Run:  PYTHONPATH=src python examples/extended_pipeline.py
 """
 
 from repro.configs.rag_pipelines import PRESETS
-from repro.core import optimizer as opt
 from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.serving_plan import ServingPlan
 from repro.core.stage_registry import REGISTRY
 
 
@@ -17,17 +19,44 @@ def main():
     print("registered stages:",
           [f"{s.name}({s.placement})" for s in REGISTRY.ordered()])
 
+    plans = {}
     for name, make in PRESETS.items():
         schema = make("8B")
-        plans = opt.enumerate_plans(schema, system)
-        best = opt.best_qps_per_chip(plans)
+        plan = ServingPlan.optimize(schema, system)
+        plans[name] = (schema, plan)
         print(f"\n{name}: pipeline {schema.stages()}")
-        print(f"  {len(plans)} Pareto schedules; RAGO pick "
-              f"{best.qps_per_chip:.3f} QPS/chip @ TTFT "
-              f"{best.ttft*1e3:.1f} ms")
-        print(f"  placement {best.placement} chips "
-              f"{best.detail['group_chips']} + decode "
-              f"{best.detail['decode_chips']}")
+        print(f"  {plan.describe()}")
+
+    # deploy one optimizer-chosen plan as a live server (tiny stand-in
+    # models; decode_slots etc. clamped to container scale)
+    import jax
+    import numpy as np
+
+    from repro.data.synthetic import topical_corpus
+    from repro.models import transformer as tr
+    from repro.serving.engine import Component
+    from repro.serving.server import RAGServer, poisson_offsets
+
+    def mk(seed, causal=True, d=48):
+        cfg = tr.TransformerConfig(name=f"x{seed}", n_layers=2, d_model=d,
+                                   n_heads=4, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab_size=128, causal=causal)
+        return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+    name = "multi_query"
+    schema, plan = plans[name]
+    corpus, _topics, make_q = topical_corpus(64, 10, 128, n_topics=4)
+    server = RAGServer.from_plan(
+        plan, mk(0), mk(1, causal=False, d=32), corpus,
+        decode_slots=2, s_max=96, retrieval_k=2, max_new_tokens=4,
+        fanout_tokens=2)
+    print(f"\ndeploying {name}: engine stages "
+          f"{[ex.name for ex in server.engine.executors]}")
+    qs = [make_q(i % 4) for i in range(4)]
+    server.replay(qs, poisson_offsets(4.0, len(qs), seed=0))
+    s = server.summary()
+    print(f"served open-loop: {s['n_done']}/{s['n_submitted']} done, "
+          f"qps {s['qps']:.2f}, ttft {s['ttft_s'] * 1e3:.0f} ms")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,21 @@
-"""End-to-end RAG serving driver: small LM + encoder + IVF-PQ retrieval over
-a topical synthetic corpus, batched requests through the continuous-batching
-engine (the executable counterpart of the paper's pipeline).
+"""Open-loop RAG serving driver: small LM + encoder + IVF-PQ retrieval over
+a topical synthetic corpus, Poisson arrivals streamed through `RAGServer`
+(the executable counterpart of the paper's pipeline).
+
+Requests are submitted open-loop (arrivals don't wait for completions),
+each with its own arrival timestamp and a deadline; tokens stream back
+per-request while the engine continuous-batches underneath.
 
 Run:  PYTHONPATH=src python examples/serve_rag.py
 """
 
-import time
-
-import jax
 import numpy as np
+import jax
 
 from repro.data.synthetic import topical_corpus
 from repro.models import transformer as tr
 from repro.serving.engine import Component, EngineConfig, RAGEngine
-from repro.serving.request import Request
+from repro.serving.server import RAGServer, poisson_offsets
 
 VOCAB = 256
 
@@ -32,31 +34,44 @@ def main():
         encoder=component(1, causal=False, d=32),
         corpus_tokens=corpus,
         cfg=EngineConfig(decode_slots=4, s_max=128, retrieval_k=2,
-                         max_new_tokens=12))
+                         max_new_tokens=12, retrieval_backend="ivfpq"))
+    server = RAGServer(engine)
 
+    # streaming: print a mark per generated token as it is produced
+    def on_token(handle, tok):
+        print(f"  req {handle.rid} +token {tok} "
+              f"({len(handle.streamed)}/{handle.request.max_new_tokens})")
+
+    # one streamed request first: iterating the handle drives the server
+    h = server.submit(make_q(0), max_new_tokens=6, on_token=on_token)
+    print(f"streaming req {h.rid}:", list(h.tokens()))
+
+    # then open-loop Poisson traffic at 4 QPS with a 10 s deadline
     rng = np.random.default_rng(0)
-    requests = [Request(question=make_q(int(rng.integers(0, 8))))
-                for _ in range(12)]
-    t0 = time.time()
-    done = engine.serve(requests)
-    dt = time.time() - t0
+    questions = [make_q(int(rng.integers(0, 8))) for _ in range(12)]
+    handles = server.replay(questions, poisson_offsets(4.0, 12, seed=1),
+                            deadline=10.0)
 
-    hits = total = 0
-    for r in done:
-        ids = r.retrieved_ids[0]
-        topic = int(np.argmax(np.bincount(
-            [topics[d] for d in ids], minlength=8)))
-        print(f"req {r.rid}: retrieved docs {ids} (topics "
-              f"{[int(topics[d]) for d in ids]}), "
-              f"generated {len(r.output)} tokens, ttft {r.ttft*1e3:.0f} ms")
-    toks = sum(len(r.output) for r in done)
+    for h in handles:
+        r = h.request
+        ids = r.retrieved_ids[0] if r.retrieved_ids else []
+        ttft = f"{r.ttft * 1e3:.0f} ms" if r.ttft is not None else "-"
+        print(f"req {r.rid}: {r.state.value}, retrieved {ids} (topics "
+              f"{[int(topics[d]) for d in ids]}), {len(r.output)} tokens, "
+              f"ttft {ttft}")
+
+    s = server.summary()
     m = engine.metrics
-    print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
-    print(f"engine metrics: {m}")
-    util = 1 - m['idle_slot_steps'] / (m['decode_steps']
+    ttft_ms = f"{s['ttft_s'] * 1e3:.0f}" if s["ttft_s"] is not None else "-"
+    tpot_ms = f"{s['tpot_s'] * 1e3:.1f}" if s["tpot_s"] is not None else "-"
+    print(f"\nopen-loop: {s['n_done']}/{s['n_submitted']} done "
+          f"({s['n_expired']} expired), qps {s['qps']:.2f}, "
+          f"ttft {ttft_ms} ms, tpot {tpot_ms} ms")
+    util = 1 - m["idle_slot_steps"] / (m["decode_steps"]
                                        * engine.pool.n_slots)
     print(f"decode slot utilization: {util:.0%} (continuous batching)")
+    stage_ms = {k: round(v * 1e3) for k, v in m["stage_time_s"].items()}
+    print(f"per-stage wall time (ms): {stage_ms}")
 
 
 if __name__ == "__main__":

@@ -27,9 +27,12 @@ def multi_query(generative: str = "8B", queries: int = 4) -> RAGSchema:
 
 
 def safety_screened(generative: str = "70B") -> RAGSchema:
-    """Encoder safety screen over the assembled prompt before prefill."""
+    """Encoder safety screen over the assembled prompt before prefill.
+    The screening threshold lives in the schema (single source of truth):
+    ``EngineConfig.from_schema`` deploys it, the engine drops docs
+    scoring below it."""
     return RAGSchema(generative=MODELS[generative],
-                     safety_model=ENCODER_120M)
+                     safety_model=ENCODER_120M, safety_threshold=0.0)
 
 
 def full_pipeline(generative: str = "70B", queries: int = 2) -> RAGSchema:
@@ -38,7 +41,7 @@ def full_pipeline(generative: str = "70B", queries: int = 2) -> RAGSchema:
     return RAGSchema(generative=MODELS[generative],
                      rewriter=MODELS["8B"], reranker=ENCODER_120M,
                      queries_per_retrieval=queries, fanout_model=LLAMA3_1B,
-                     safety_model=ENCODER_120M)
+                     safety_model=ENCODER_120M, safety_threshold=0.0)
 
 
 PRESETS = {

@@ -110,13 +110,19 @@ def _iterative_overhead_fn(schema: RAGSchema, sys: SystemConfig,
         tpot = cmod.decode_tpot(g, sys.xpu, prefill_chips, b_d,
                                 schema.prefix_len + schema.decode_len // 2)
         event_rate = b_d * freq / (schema.decode_len * tpot)  # events/s
-        best = float("inf")
+        best, best_bit = float("inf"), None
         for b_it in st.BATCHES:
             wait = (b_it - 1) / 2.0 / event_rate
-            best = min(best, schema_decode_stall(
-                schema, sys, n_servers, prefill_chips, b_it, base=wait))
+            stall = schema_decode_stall(
+                schema, sys, n_servers, prefill_chips, b_it, base=wait)
+            if stall < best:
+                best, best_bit = stall, b_it
+        overhead.chosen[b_d] = best_bit
         return (freq - 1) * best
 
+    # the b_it RAGO picked per decode batch, so plans can record it and a
+    # ServingPlan can deploy it as the engine's iterative retrieval_batch
+    overhead.chosen = {}
     return overhead
 
 
@@ -157,16 +163,19 @@ def _eval_allocation(schema: RAGSchema, sys: SystemConfig, placement,
     for lat_pre, tput_pre, meta_pre in pre:
         for _tpot, tput_dec, meta_dec in dec:
             qps = min(tput_pre, tput_dec)
+            detail = {"stages": _flatten_meta(meta_pre)
+                      + _flatten_meta(meta_dec),
+                      "group_chips": group_chips,
+                      "decode_chips": decode_chips,
+                      "n_servers": n_servers}
+            if over is not None:
+                detail["iter_batch"] = over.chosen.get(meta_dec["batch"])
             out.append(PlanPoint(
                 ttft=lat_pre, qps=qps,
                 qps_per_chip=qps / total, total_chips=total,
                 qps_per_platform_chip=qps / total_budget,
                 placement=tuple(tuple(g) for g in placement),
-                detail={"stages": _flatten_meta(meta_pre)
-                        + _flatten_meta(meta_dec),
-                        "group_chips": group_chips,
-                        "decode_chips": decode_chips,
-                        "n_servers": n_servers}))
+                detail=detail))
     return out
 
 

@@ -95,8 +95,10 @@ class RAGSchema:
     # semantics for multiple query vectors (Fig. 6)
     fanout_model: ModelShape | None = None
     fanout_out_len: int = 16               # generated tokens per variant
-    # encoder-based safety screen over the assembled prompt, else None
+    # encoder-based safety screen over the assembled prompt, else None;
+    # docs scoring below safety_threshold are dropped (None = score only)
     safety_model: ModelShape | None = None
+    safety_threshold: float | None = None
 
     @property
     def has_iterative(self) -> bool:

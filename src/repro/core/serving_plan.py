@@ -1,0 +1,126 @@
+"""ServingPlan: the executable bridge from optimizer output to a deployed
+serving configuration -- the piece that closes RAGO's schema -> plan ->
+server loop.
+
+``enumerate_plans`` emits analytical :class:`~repro.core.optimizer.
+PlanPoint` schedules; ``RAGEngine`` consumes an ``EngineConfig``.  A
+``ServingPlan`` maps one onto the other:
+
+* the *schema* drives stage enabling/sizing via the stage registry
+  (``EngineConfig.from_schema``), so nothing the schema already says is
+  re-encoded by hand;
+* the *plan point* contributes the schedule RAGO chose: the decode batch
+  becomes ``decode_slots`` (continuous-batching slot count), the
+  iterative-retrieval batch (paper §6.1[III]) becomes ``retrieval_batch``,
+  and the retrieval regime picks the engine backend (full-scan schemas
+  deploy exact kNN, sub-linear scan fractions deploy the IVF-PQ index);
+* *overrides* carry whatever the analytical model does not describe
+  (test-scale clamps, an explicit backend, ...) and always win last.
+
+One call chain runs the paper's whole workflow::
+
+    plan = ServingPlan.optimize(schema, system)       # search + pick
+    server = RAGServer.from_plan(plan, generative=..., encoder=...,
+                                 corpus_tokens=corpus)
+    handle = server.submit(question)
+
+This module stays import-light (no jax): ``engine_config`` imports the
+serving engine lazily, so the optimizer stack can build plans on machines
+that never deploy them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.ragschema import RAGSchema
+
+
+@dataclass
+class ServingPlan:
+    """Deployable serving schedule for one RAGSchema."""
+    schema: RAGSchema
+    placement: tuple = ()              # pre-decode stage groups
+    group_chips: tuple = ()            # XPUs per pre-decode group
+    decode_chips: int = 0
+    n_servers: int = 1                 # retrieval host servers
+    stage_batches: dict[str, int] = field(default_factory=dict)
+    iter_batch: int | None = None      # iterative retrieval batch (b_it)
+    predicted: dict[str, float] = field(default_factory=dict)
+    engine_overrides: dict[str, Any] = field(default_factory=dict)
+
+    # ---------------- construction -----------------------------------------
+
+    @classmethod
+    def from_plan_point(cls, schema: RAGSchema, point,
+                        **engine_overrides) -> "ServingPlan":
+        """Turn one optimizer PlanPoint into a deployable plan."""
+        detail = point.detail or {}
+        batches = {m["stage"]: m["batch"]
+                   for m in detail.get("stages", []) if "batch" in m}
+        return cls(
+            schema=schema,
+            placement=tuple(tuple(g) for g in point.placement),
+            group_chips=tuple(detail.get("group_chips", ())),
+            decode_chips=int(detail.get("decode_chips", 0)),
+            n_servers=int(detail.get("n_servers", 1)),
+            stage_batches=batches,
+            iter_batch=detail.get("iter_batch"),
+            predicted={"ttft": point.ttft, "qps": point.qps,
+                       "qps_per_chip": point.qps_per_chip},
+            engine_overrides=dict(engine_overrides))
+
+    @classmethod
+    def optimize(cls, schema: RAGSchema, system,
+                 objective: str = "qps_per_chip",
+                 **engine_overrides) -> "ServingPlan":
+        """The full paper workflow in one call: run the RAGO search over
+        the schema on ``system`` and return the chosen plan
+        (``objective``: ``"qps_per_chip"`` -- most cost-efficient plan
+        meeting capacity, Table 4 -- or ``"ttft"``)."""
+        from repro.core import optimizer as opt
+        plans = opt.enumerate_plans(schema, system)
+        if objective == "qps_per_chip":
+            best = opt.best_qps_per_chip(plans)
+        elif objective == "ttft":
+            best = opt.best_ttft(plans)
+        else:
+            raise ValueError(f"unknown objective {objective!r}")
+        return cls.from_plan_point(schema, best, **engine_overrides)
+
+    # ---------------- deployment -------------------------------------------
+
+    def engine_config(self, **overrides):
+        """Materialize the EngineConfig: schema-derived stage fields
+        (registry), plan-derived schedule fields, then overrides."""
+        from repro.serving.engine import EngineConfig
+        derived: dict[str, Any] = {}
+        if "decode" in self.stage_batches:
+            derived["decode_slots"] = int(self.stage_batches["decode"])
+        if self.iter_batch:
+            derived["retrieval_batch"] = int(self.iter_batch)
+        # retrieval regime -> backend: a full-scan schema (long-context
+        # Case II builds its DB on the fly) deploys brute-force kNN; a
+        # sub-linear scan fraction deploys the IVF-PQ index
+        if self.schema.db_vectors > 0:
+            derived["retrieval_backend"] = (
+                "exact" if self.schema.scan_fraction >= 1.0 else "ivfpq")
+        merged = {**derived, **self.engine_overrides, **overrides}
+        return EngineConfig.from_schema(self.schema, **merged)
+
+    # ---------------- reporting --------------------------------------------
+
+    def describe(self) -> str:
+        groups = " | ".join(
+            f"{'+'.join(g)}@{c}" for g, c in
+            zip(self.placement, self.group_chips)) or "-"
+        pred = self.predicted
+        return (f"ServingPlan[{groups} || decode@{self.decode_chips} "
+                f"chips, {self.n_servers} retrieval servers; "
+                f"batches {self.stage_batches}"
+                + (f", iter_batch {self.iter_batch}" if self.iter_batch
+                   else "")
+                + (f"; predicted {pred.get('qps', 0):.1f} QPS @ "
+                   f"{pred.get('ttft', 0) * 1e3:.1f} ms TTFT" if pred
+                   else "") + "]")

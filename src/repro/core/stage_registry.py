@@ -36,6 +36,12 @@ A pipeline stage is fully described by a :class:`StageSpec`:
   composes its request pipeline exclusively from these factories, so the
   analytical model and the executable engine consume the same
   description.
+* ``engine_knobs`` -- optional ``f(schema) -> dict``: the EngineConfig
+  fields this stage derives from the schema when it is enabled
+  (``EngineConfig.from_schema`` merges them).  This is what makes the
+  schema the single source of truth for the executable engine: a stage's
+  enabling/config fields are never hand-set twice (once in the schema,
+  once in an EngineConfig) -- the registry maps one onto the other.
 
 Adding a stage therefore requires exactly one ``register()`` call (plus the
 schema field that enables it) -- no edits to ``stages.py``,
@@ -72,6 +78,7 @@ class StageSpec:
     points: Callable[..., list] | None = None
     decode_stall: Callable[..., float] | None = None
     make_executor: Callable[[Any], Any] | None = None
+    engine_knobs: Callable[[Any], dict] | None = None
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -125,6 +132,16 @@ class StageRegistry:
             if ex is not None:
                 out.append(ex)
         return out
+
+    def engine_config_fields(self, schema) -> dict:
+        """Merged EngineConfig fields derived from the schema: every
+        enabled stage contributes its ``engine_knobs`` mapping (the
+        registry-driven half of ``EngineConfig.from_schema``)."""
+        fields: dict = {}
+        for spec in self.ordered():
+            if spec.engine_knobs is not None and spec.enabled(schema):
+                fields.update(spec.engine_knobs(schema))
+        return fields
 
 
 REGISTRY = StageRegistry()
@@ -198,7 +215,7 @@ def _prefill_stall(schema, sys, n, batch):
 def _rewrite_executor(engine):
     from repro.serving import executors as ex
     if engine.cfg.rewrite_tokens and engine.rewriter is not None:
-        return ex.RewriteExecutor()
+        return ex.RewriteExecutor(engine.rewriter)
     return None
 
 
@@ -210,8 +227,38 @@ def _retrieval_executor(engine):
 def _rerank_executor(engine):
     from repro.serving import executors as ex
     if engine.cfg.rerank and engine.reranker is not None:
-        return ex.RerankExecutor()
+        return ex.RerankExecutor(engine.reranker)
     return None
+
+
+# -- EngineConfig fields each stage derives from the schema -----------------
+# (consumed by ``EngineConfig.from_schema`` via
+# ``REGISTRY.engine_config_fields``; deployment/resource knobs such as
+# decode_slots or the retrieval backend come from the ServingPlan, not from
+# per-stage knobs)
+
+def _rewrite_knobs(s) -> dict:
+    return {"rewrite_tokens": s.rewriter_out_len}
+
+
+def _retrieval_knobs(s) -> dict:
+    # iterative retrieval (paper S5.3): retrieval_frequency events spread
+    # over the decode length; the first retrieval happens at admission
+    return {"iterative_interval":
+            (max(1, s.decode_len // s.retrieval_frequency)
+             if s.retrieval_frequency > 1 else None)}
+
+
+def _rerank_knobs(s) -> dict:
+    return {"rerank": True, "rerank_candidates": s.rerank_candidates}
+
+
+def _prefill_knobs(s) -> dict:
+    return {"s_max": s.prefix_len + s.decode_len}
+
+
+def _decode_knobs(s) -> dict:
+    return {"max_new_tokens": s.decode_len}
 
 
 REGISTRY.register(StageSpec(
@@ -220,6 +267,7 @@ REGISTRY.register(StageSpec(
     load=lambda s: 1.0,
     weights_bytes=lambda s: _model_bytes(s.encoder),
     points=_encode_points,
+    engine_knobs=lambda s: {},      # the encoder is a constructor component
 ))
 
 REGISTRY.register(StageSpec(
@@ -229,6 +277,7 @@ REGISTRY.register(StageSpec(
     weights_bytes=lambda s: _model_bytes(s.rewriter),
     points=_rewrite_points,
     make_executor=_rewrite_executor,
+    engine_knobs=_rewrite_knobs,
 ))
 
 REGISTRY.register(StageSpec(
@@ -239,6 +288,7 @@ REGISTRY.register(StageSpec(
     points=_retrieval_points,
     decode_stall=_retrieval_stall,
     make_executor=_retrieval_executor,
+    engine_knobs=_retrieval_knobs,
 ))
 
 REGISTRY.register(StageSpec(
@@ -248,6 +298,7 @@ REGISTRY.register(StageSpec(
     weights_bytes=lambda s: _model_bytes(s.reranker),
     points=_rerank_points,
     make_executor=_rerank_executor,
+    engine_knobs=_rerank_knobs,
 ))
 
 REGISTRY.register(StageSpec(
@@ -257,6 +308,7 @@ REGISTRY.register(StageSpec(
     weights_bytes=lambda s: _model_bytes(s.generative),
     points=_prefill_points,
     decode_stall=_prefill_stall,
+    engine_knobs=_prefill_knobs,
 ))
 
 REGISTRY.register(StageSpec(
@@ -264,6 +316,7 @@ REGISTRY.register(StageSpec(
     enabled=lambda s: True,
     load=lambda s: 1.0,
     weights_bytes=lambda s: _model_bytes(s.generative),
+    engine_knobs=_decode_knobs,
 ))
 
 
@@ -292,7 +345,8 @@ def _multi_query_points(schema, sys, n, batch, tp_only=False):
 def _multi_query_executor(engine):
     from repro.serving import executors as ex
     if engine.cfg.fanout_queries > 1:
-        return ex.MultiQueryExecutor()
+        model = engine.rewriter if engine.rewriter is not None else engine.gen
+        return ex.MultiQueryExecutor(model)
     return None
 
 
@@ -309,6 +363,8 @@ REGISTRY.register(StageSpec(
     weights_bytes=lambda s: _model_bytes(s.fanout_model),
     points=_multi_query_points,
     make_executor=_multi_query_executor,
+    engine_knobs=lambda s: {"fanout_queries": s.queries_per_retrieval,
+                            "fanout_tokens": s.fanout_out_len},
 ))
 
 
@@ -331,7 +387,7 @@ def _safety_stall(schema, sys, n, batch):
 def _safety_executor(engine):
     from repro.serving import executors as ex
     if engine.safety is not None:
-        return ex.SafetyFilterExecutor()
+        return ex.SafetyFilterExecutor(engine.safety)
     return None
 
 
@@ -343,4 +399,5 @@ REGISTRY.register(StageSpec(
     points=_safety_points,
     decode_stall=_safety_stall,
     make_executor=_safety_executor,
+    engine_knobs=lambda s: {"safety_threshold": s.safety_threshold},
 ))

@@ -379,6 +379,45 @@ def decode_step(params: dict, cache: dict, token: jax.Array,
     return logits, {"k": caches[0], "v": caches[1]}
 
 
+def greedy_generate(params: dict, tokens: jax.Array, lengths: jax.Array,
+                    cfg: TransformerConfig, n_new: int,
+                    compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Batched greedy continuation: ONE fused program per (T, n_new) shape.
+
+    tokens: (B, T) int32 prompts, right-padded; lengths: (B,) valid prompt
+    lengths.  Returns (B, n_new) int32 generated tokens.  The whole
+    generation -- full prefill forward, per-row first-token argmax, and a
+    ``lax.scan`` over decode steps -- runs inside a single XLA program, so
+    jitting this (one compile per prompt bucket x n_new) replaces the
+    eager one-decode-dispatch-per-token loops the serving executors used
+    for query rewriting and multi-query fan-out.
+
+    Padding is inert: row b's pad positions >= lengths[b] get garbage K/V
+    from the prefill, but decode step i writes position lengths[b]+i before
+    attending up to it, so every attended slot holds either real prompt
+    K/V or a previously generated token's K/V.
+    """
+    B, T = tokens.shape
+    logits, _aux, cache = forward(params, tokens, cfg, compute_dtype,
+                                  collect_cache=True)
+    # room for the generated tokens after the longest prompt
+    pad = ((0, 0), (0, 0), (0, n_new), (0, 0), (0, 0))
+    cache = {k: jnp.pad(v, pad) for k, v in cache.items()}
+    lengths = lengths.astype(jnp.int32)
+    first = jnp.argmax(
+        logits[jnp.arange(B), lengths - 1, :cfg.vocab_size],
+        axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        tok, pos, cache = carry
+        lg, cache = decode_step(params, cache, tok, pos, cfg, compute_dtype)
+        nxt = jnp.argmax(lg[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return (nxt, pos + 1, cache), tok
+
+    _, toks = jax.lax.scan(body, (first, lengths, cache), None, length=n_new)
+    return toks.T                                     # (B, n_new)
+
+
 def chunk_extend(params: dict, cache: dict, slot: jax.Array,
                  tokens: jax.Array, start_pos: jax.Array,
                  n_valid: jax.Array, cfg: TransformerConfig,

@@ -50,6 +50,7 @@ otherwise).
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from functools import partial
 
@@ -91,6 +92,23 @@ class EngineConfig:
     # decode-step fusion (False keeps the pre-fusion path for parity tests)
     fused_decode: bool = True
 
+    @classmethod
+    def from_schema(cls, schema, **overrides) -> "EngineConfig":
+        """Derive an EngineConfig from a RAGSchema via the stage registry.
+
+        Every enabled StageSpec contributes its ``engine_knobs`` mapping
+        (e.g. the rewriter stage sets ``rewrite_tokens`` from
+        ``schema.rewriter_out_len``), so the schema is the single source
+        of truth for stage enabling/sizing -- those fields are never
+        hand-set alongside a schema again.  ``overrides`` are for
+        deployment/resource knobs the schema does not describe
+        (``decode_slots``, ``retrieval_backend``, test-scale clamps, ...)
+        and win over derived values.
+        """
+        fields = REGISTRY.engine_config_fields(schema)
+        fields.update(overrides)
+        return cls(**fields)
+
 
 @dataclass
 class Component:
@@ -120,7 +138,7 @@ class RAGEngine:
                         "retrieval_batches": 0, "prefills": 0,
                         "prefill_compiles": 0, "append_compiles": 0,
                         "host_syncs": 0, "decode_host_syncs": 0,
-                        "cache_copy_bytes": 0}
+                        "cache_copy_bytes": 0, "stage_time_s": {}}
         self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
         self._fused_decode_jit = jax.jit(
             partial(self._fused_decode, cfg=self.gen.cfg),
@@ -140,6 +158,22 @@ class RAGEngine:
 
     def has_executor(self, name: str) -> bool:
         return any(ex.name == name for ex in self.executors)
+
+    @contextmanager
+    def _timed(self, stage: str):
+        """Accumulate wall time into ``metrics['stage_time_s'][stage]``.
+
+        Attribution is wall-clock at the call site: executor stages are
+        timed inclusively (their internal ``embed``/``retrieve`` primitive
+        calls also count toward the primitive buckets), which is the
+        breakdown the XPU-side cost-model calibration wants -- where does
+        a served second actually go."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            acc = self.metrics["stage_time_s"]
+            acc[stage] = acc.get(stage, 0.0) + time.perf_counter() - t0
 
     def _embed_batched(self, tokens: np.ndarray, bs: int = 32) -> jnp.ndarray:
         """Encode rows in fixed-size batches through one jitted encoder.
@@ -165,8 +199,10 @@ class RAGEngine:
         Approximate backends may pad the id tail with -1 when the probed
         lists run out of candidates; callers must drop negative ids before
         indexing the corpus."""
-        qv = self._embed_batched(queries)
-        _, idx = self.backend.search(qv, k)
+        with self._timed("embed"):
+            qv = self._embed_batched(queries)
+        with self._timed("retrieve"):
+            _, idx = self.backend.search(qv, k)
         self.metrics["host_syncs"] += 1
         return np.asarray(idx)
 
@@ -188,6 +224,7 @@ class RAGEngine:
         tail padding inert for positions < len(prompt); the first token's
         logits are read at position len(prompt)-1 and only the valid cache
         prefix is installed in the slot."""
+        req.state = State.PREFILL
         prompt = req.prompt
         length = len(prompt)
         bucket = bucket_len(length)
@@ -214,10 +251,12 @@ class RAGEngine:
         while self.queue and self.pool.free:
             req = self.queue.pop(0)
             for ex in self.executors:
-                ex.run(self, req)
+                with self._timed(ex.name):
+                    ex.run(self, req)
             req.prompt = self._assemble_prompt(req)
             slot = self.pool.alloc(req.rid)
-            self._prefill(req, slot)
+            with self._timed("prefill"):
+                self._prefill(req, slot)
             self.active[req.slot] = req
 
     # ---------------- decode loop ------------------------------------------
@@ -260,6 +299,8 @@ class RAGEngine:
             ids = self.retrieve(qs, 1)
             self.metrics["retrieval_batches"] += 1
             for req, docs in zip(batch, ids):
+                if req.state is not State.WAIT_RETRIEVAL:
+                    continue                    # finished (EOS) while queued
                 docs = docs[docs >= 0]          # drop ANN padding ids
                 # executors may screen iteratively retrieved content before
                 # it reaches the cache (same events the analytical
@@ -267,14 +308,16 @@ class RAGEngine:
                 for ex in self.executors:
                     fi = getattr(ex, "filter_iterative", None)
                     if fi is not None:
-                        docs = fi(self, req, docs)
+                        with self._timed(ex.name):
+                            docs = fi(self, req, docs)
                 req.retrieved_ids.append(list(map(int, docs)))
                 req.retrievals_done += 1
                 if len(docs):
                     new_ctx = self.corpus[docs[0]]
                     room = self.pool.s_max - self.pool.lengths[req.slot] - 2
                     if room > 0:
-                        self._append_tokens(req.slot, new_ctx[:room])
+                        with self._timed("append"):
+                            self._append_tokens(req.slot, new_ctx[:room])
                 req.state = State.DECODE
 
     @staticmethod
@@ -304,6 +347,10 @@ class RAGEngine:
         self.metrics["idle_slot_steps"] += self.pool.n_slots - len(stepping)
         if not stepping:
             return
+        with self._timed("decode"):
+            self._decode_active(token_vec, stepping)
+
+    def _decode_active(self, token_vec, stepping) -> None:
         if self.cfg.fused_decode:
             step_mask = np.zeros(self.pool.n_slots, bool)
             step_mask[stepping] = True
@@ -355,17 +402,14 @@ class RAGEngine:
 
     def serve(self, requests: list[Request],
               max_steps: int = 10000) -> list[Request]:
+        """Closed-batch compatibility wrapper: submit every request at once
+        to a throwaway open-loop :class:`repro.serving.server.RAGServer`
+        and drain it.  Token-for-token identical to the pre-server loop
+        (same admit / iterative-dispatch / decode step order); new code
+        should drive a ``RAGServer`` directly."""
+        from repro.serving.server import RAGServer
+        server = RAGServer(self)
         for r in requests:
-            r.t_arrive = time.monotonic()
-            r.max_new_tokens = min(r.max_new_tokens, self.cfg.max_new_tokens)
-            self.queue.append(r)
-        steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self._admit()
-            self._dispatch_iterative(
-                force=not any(r.state is State.DECODE
-                              for r in self.active.values()))
-            self._decode_step()
-            steps += 1
-        self._dispatch_iterative(force=True)
+            server.submit_request(r)
+        server.run_until_idle(max_steps=max_steps)
         return requests

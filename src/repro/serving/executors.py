@@ -17,6 +17,8 @@ admission, before prompt assembly and prefill.
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,22 +27,49 @@ from repro.models import transformer as tr
 from repro.serving.request import State
 
 
-def generate_greedy(comp, prompt: np.ndarray, n_tokens: int) -> np.ndarray:
-    """Small greedy generation loop (rewriter / fan-out variants)."""
-    cache_len = int(2 ** np.ceil(np.log2(prompt.shape[0] + n_tokens + 1)))
-    logits, cache = tr.prefill(comp.params, jnp.asarray(prompt)[None],
-                               comp.cfg, cache_len=cache_len)
-    toks = []
-    pos = prompt.shape[0]
-    tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
-    for _ in range(n_tokens):
-        toks.append(int(tok))
-        logits, cache = tr.decode_step(
-            comp.params, cache, tok[None].astype(jnp.int32),
-            jnp.asarray([pos], jnp.int32), comp.cfg)
-        tok = jnp.argmax(logits[0][:comp.cfg.vocab_size])
-        pos += 1
-    return np.asarray(toks, np.int32)
+class GreedyGenerator:
+    """Batched greedy generation through one fused jitted program
+    (``tr.greedy_generate``): prompts are right-padded to a power-of-two
+    bucket and ALL rows decode together inside a single dispatch, so an
+    n-variant fan-out costs one XLA call instead of n eager per-token
+    loops.  ``n_tokens`` is baked statically (one wrapper per value, kept
+    for the engine's lifetime); jit's own shape cache bounds compiles to
+    one per prompt bucket."""
+
+    def __init__(self, comp):
+        self.comp = comp
+        self._jit: dict[int, object] = {}
+
+    def __call__(self, prompts: list[np.ndarray],
+                 n_tokens: int) -> np.ndarray:
+        from repro.serving.engine import bucket_len
+        bucket = bucket_len(max(len(p) for p in prompts))
+        tokens = np.zeros((len(prompts), bucket), np.int32)
+        lengths = np.empty(len(prompts), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, :len(p)] = p
+            lengths[i] = len(p)
+        fn = self._jit.get(n_tokens)
+        if fn is None:
+            fn = jax.jit(partial(tr.greedy_generate, cfg=self.comp.cfg,
+                                 n_new=n_tokens))
+            self._jit[n_tokens] = fn
+        return np.asarray(fn(self.comp.params, jnp.asarray(tokens),
+                             jnp.asarray(lengths)))
+
+
+class _JitEncode:
+    """Jitted encoder call for the rerank / safety stages (their
+    per-request eager ``tr.encode`` dominated those stages' wall time;
+    jit retraces per input shape, and question/doc shapes take few
+    distinct values, so compile count stays small)."""
+
+    def __init__(self, comp):
+        self.comp = comp
+        self._fn = jax.jit(partial(tr.encode, cfg=comp.cfg))
+
+    def __call__(self, tokens) -> jnp.ndarray:
+        return self._fn(self.comp.params, jnp.asarray(tokens))
 
 
 def _query(req) -> np.ndarray:
@@ -49,32 +78,37 @@ def _query(req) -> np.ndarray:
 
 class RewriteExecutor:
     """Autoregressive query rewrite: question -> question + generated
-    expansion tokens."""
+    expansion tokens (one fused jitted generation call)."""
     name = "rewrite"
+
+    def __init__(self, comp):
+        self._gen = GreedyGenerator(comp)
 
     def run(self, eng, req) -> None:
         req.state = State.REWRITING
-        extra = generate_greedy(eng.rewriter, req.question,
-                                eng.cfg.rewrite_tokens)
+        extra = self._gen([req.question], eng.cfg.rewrite_tokens)[0]
         req.rewritten = np.concatenate([req.question, extra])
 
 
 class MultiQueryExecutor:
     """Multi-query fan-out: expand the (possibly rewritten) question into
     ``fanout_queries`` variants, each the base query plus a short greedy
-    continuation from a distinct seed token.  Downstream retrieval searches
-    with every variant and unions the candidates."""
+    continuation from a distinct seed token.  All variants share one seed
+    length, so they generate as ONE batched jitted call; downstream
+    retrieval searches with every variant and unions the candidates."""
     name = "multi_query"
+
+    def __init__(self, comp):
+        self._gen = GreedyGenerator(comp)
 
     def run(self, eng, req) -> None:
         base = _query(req)
-        model = eng.rewriter if eng.rewriter is not None else eng.gen
-        variants = [base]
-        for i in range(1, eng.cfg.fanout_queries):
-            seed = np.append(base, np.int32(i % model.cfg.vocab_size))
-            extra = generate_greedy(model, seed, eng.cfg.fanout_tokens)
-            variants.append(np.concatenate([base, extra]))
-        req.query_variants = variants
+        vocab = self._gen.comp.cfg.vocab_size
+        seeds = [np.append(base, np.int32(i % vocab))
+                 for i in range(1, eng.cfg.fanout_queries)]
+        extras = self._gen(seeds, eng.cfg.fanout_tokens)
+        req.query_variants = [base] + [np.concatenate([base, e])
+                                       for e in extras]
 
 
 class RetrieveExecutor:
@@ -106,13 +140,14 @@ class RerankExecutor:
     """Score retrieval candidates with the reranker encoder; keep top-k."""
     name = "rerank"
 
+    def __init__(self, comp):
+        self._encode = _JitEncode(comp)
+
     def run(self, eng, req) -> None:
         q = _query(req)
         cand = req.candidate_ids
-        qv = tr.encode(eng.reranker.params, jnp.asarray(q)[None],
-                       eng.reranker.cfg)[0]
-        docs = jnp.asarray(eng.corpus[cand])
-        dv = tr.encode(eng.reranker.params, docs, eng.reranker.cfg)
+        qv = self._encode(np.asarray(q)[None])[0]
+        dv = self._encode(eng.corpus[cand])
         scores = dv @ qv
         order = np.asarray(jnp.argsort(-scores))[:eng.cfg.retrieval_k]
         req.candidate_ids = cand[order]
@@ -126,9 +161,11 @@ class SafetyFilterExecutor:
     ``None`` the stage only records scores."""
     name = "safety_filter"
 
+    def __init__(self, comp):
+        self._encode = _JitEncode(comp)
+
     def _score(self, eng, doc_ids) -> np.ndarray:
-        dv = tr.encode(eng.safety.params, jnp.asarray(eng.corpus[doc_ids]),
-                       eng.safety.cfg)
+        dv = self._encode(eng.corpus[doc_ids])
         return np.asarray(jax.nn.sigmoid(dv[:, 0].astype(jnp.float32)))
 
     def run(self, eng, req) -> None:

@@ -1,4 +1,15 @@
-"""Request lifecycle for the RAG serving engine."""
+"""Request lifecycle for the RAG serving engine.
+
+Every assignment to ``Request.state`` is recorded in ``state_history``, so
+tests (and debugging) can assert the lifecycle against
+``LEGAL_TRANSITIONS`` -- the full transition graph of the serving engine:
+
+    QUEUED -> [REWRITING] -> [RETRIEVING] -> PREFILL -> DECODE
+           -> (WAIT_RETRIEVAL -> DECODE)* -> DONE
+    QUEUED -> EXPIRED            (deadline passed before admission)
+
+``EXPIRED`` requests are terminal: they are never prefilled or decoded.
+"""
 
 from __future__ import annotations
 
@@ -19,6 +30,26 @@ class State(enum.Enum):
     DECODE = "decode"
     WAIT_RETRIEVAL = "wait_retrieval"   # iterative retrieval stall (§5.3)
     DONE = "done"
+    EXPIRED = "expired"                 # deadline passed before admission
+
+
+#: Legal state transitions (rewrite / retrieval stages are optional, so
+#: QUEUED may jump straight to PREFILL; EOS can finish a sequence on the
+#: same step an iterative retrieval was scheduled, hence
+#: WAIT_RETRIEVAL -> DONE).
+LEGAL_TRANSITIONS: dict[State, frozenset[State]] = {
+    State.QUEUED: frozenset({State.REWRITING, State.RETRIEVING,
+                             State.PREFILL, State.EXPIRED}),
+    State.REWRITING: frozenset({State.RETRIEVING, State.PREFILL}),
+    State.RETRIEVING: frozenset({State.PREFILL}),
+    State.PREFILL: frozenset({State.DECODE}),
+    State.DECODE: frozenset({State.WAIT_RETRIEVAL, State.DONE}),
+    State.WAIT_RETRIEVAL: frozenset({State.DECODE, State.DONE}),
+    State.DONE: frozenset(),
+    State.EXPIRED: frozenset(),
+}
+
+TERMINAL_STATES = frozenset({State.DONE, State.EXPIRED})
 
 
 @dataclass
@@ -27,6 +58,7 @@ class Request:
     max_new_tokens: int = 32
     rid: int = field(default_factory=lambda: next(_ids))
     state: State = State.QUEUED
+    deadline: float | None = None         # absolute engine-clock seconds
     rewritten: np.ndarray | None = None
     query_variants: list | None = None    # multi-query fan-out variants
     candidate_ids: np.ndarray | None = None  # retrieval/rerank candidates
@@ -40,6 +72,15 @@ class Request:
     t_arrive: float = 0.0
     t_first_token: float | None = None
     t_done: float | None = None
+
+    def __setattr__(self, name, value):
+        if name == "state":
+            self.__dict__.setdefault("state_history", []).append(value)
+        object.__setattr__(self, name, value)
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     @property
     def ttft(self) -> float | None:

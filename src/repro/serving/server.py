@@ -1,0 +1,272 @@
+"""Open-loop streaming front-end over :class:`repro.serving.engine.RAGEngine`.
+
+``RAGEngine`` owns the execution machinery (stage executors, retrieval
+backend, KV pool, fused decode loop); ``RAGServer`` owns *traffic*:
+requests are submitted one at a time with their own arrival timestamps
+(open loop -- arrivals do not wait for completions), optionally carry a
+deadline, and stream their tokens back through a callback or an iterator
+on the returned :class:`RequestHandle`.
+
+    server = RAGServer(engine)                 # or RAGServer.from_plan(...)
+    h = server.submit(question, max_new_tokens=32)
+    for tok in h.tokens():                     # drives the server
+        ...
+    server.run_until_idle()                    # or step() under a driver
+
+``step()`` advances the engine by exactly one iteration of the classic
+serve loop (admit -> iterative-retrieval dispatch -> fused decode step),
+so a ``RAGServer`` fed all requests up front is token-for-token identical
+to the legacy closed-batch ``RAGEngine.serve(list)`` -- which is now a
+thin wrapper over this class.
+
+Arrival drivers: :func:`poisson_offsets` generates open-loop Poisson
+arrival times and :meth:`RAGServer.replay` replays any offset trace
+(RAGPulse-style) against the wall clock.
+
+Deadlines are absolute engine-clock (``time.monotonic``) seconds.  A
+request whose deadline passes while it is still queued is marked
+``State.EXPIRED`` and is never prefilled or decoded; requests already
+holding a decode slot run to completion.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.serving.request import Request, State
+
+
+class RequestHandle:
+    """Caller-side view of one submitted request."""
+
+    def __init__(self, server: "RAGServer", request: Request,
+                 on_token: Callable[["RequestHandle", int], None] | None):
+        self.server = server
+        self.request = request
+        self._on_token = on_token
+        self._streamed: list[int] = []
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def state(self) -> State:
+        return self.request.state
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+    @property
+    def output(self) -> list[int]:
+        return list(self.request.output)
+
+    @property
+    def streamed(self) -> list[int]:
+        """Tokens delivered so far, in stream order."""
+        return list(self._streamed)
+
+    def _deliver(self) -> int:
+        """Stream any newly generated tokens (fires the callback)."""
+        new = self.request.output[len(self._streamed):]
+        for tok in new:
+            self._streamed.append(tok)
+            if self._on_token is not None:
+                self._on_token(self, tok)
+        return len(new)
+
+    def tokens(self) -> Iterator[int]:
+        """Per-token stream.  Iterating drives the server (``step()``)
+        until this request reaches a terminal state, yielding each token
+        as it is generated; tokens already streamed are replayed first."""
+        i = 0
+        while True:
+            while i < len(self._streamed):
+                yield self._streamed[i]
+                i += 1
+            if self.done:
+                return
+            if not self.server.step() and not self.done \
+                    and len(self._streamed) == i:
+                return          # server idle; request never completed
+
+    def result(self) -> Request:
+        """Drive the server until this request is terminal; return it."""
+        for _ in self.tokens():
+            pass
+        return self.request
+
+
+class RAGServer:
+    """Open-loop serving front-end: per-request submission with its own
+    arrival timestamp, deadline screening, and per-token streaming over a
+    shared continuously-batched :class:`RAGEngine`."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.handles: dict[int, RequestHandle] = {}
+        self._live: list[RequestHandle] = []
+        self.n_expired = 0
+
+    # ---------------- deployment -------------------------------------------
+
+    @classmethod
+    def from_plan(cls, plan, generative, encoder, corpus_tokens, *,
+                  rewriter=None, reranker=None, safety=None,
+                  **config_overrides) -> "RAGServer":
+        """Deploy an optimizer-chosen :class:`~repro.core.serving_plan.
+        ServingPlan`: the plan's schema + schedule become the engine
+        configuration (``plan.engine_config()``), the caller supplies the
+        concrete model components and corpus.  ``config_overrides`` win
+        last (e.g. test-scale clamps)."""
+        from repro.serving.engine import RAGEngine
+        cfg = plan.engine_config(**config_overrides)
+        engine = RAGEngine(generative, encoder, corpus_tokens, cfg,
+                           rewriter=rewriter, reranker=reranker,
+                           safety=safety)
+        return cls(engine)
+
+    # ---------------- submission -------------------------------------------
+
+    def submit(self, question, max_new_tokens: int | None = None,
+               deadline: float | None = None,
+               arrival_time: float | None = None,
+               on_token=None) -> RequestHandle:
+        """Submit one question (open loop).  ``arrival_time`` defaults to
+        now; ``deadline`` is absolute ``time.monotonic`` seconds."""
+        req = Request(question=np.asarray(question, np.int32),
+                      max_new_tokens=(max_new_tokens
+                                      if max_new_tokens is not None
+                                      else self.engine.cfg.max_new_tokens),
+                      deadline=deadline)
+        return self.submit_request(req, arrival_time=arrival_time,
+                                   on_token=on_token)
+
+    def submit_request(self, req: Request,
+                       arrival_time: float | None = None,
+                       on_token=None) -> RequestHandle:
+        """Submit a pre-built Request (the legacy ``serve()`` path)."""
+        req.t_arrive = (arrival_time if arrival_time is not None
+                        else time.monotonic())
+        req.max_new_tokens = min(req.max_new_tokens,
+                                 self.engine.cfg.max_new_tokens)
+        self.engine.queue.append(req)
+        handle = RequestHandle(self, req, on_token)
+        self.handles[req.rid] = handle
+        self._live.append(handle)
+        return handle
+
+    # ---------------- serving loop -----------------------------------------
+
+    def _expire(self) -> None:
+        """Drop queued requests whose deadline has passed: marked EXPIRED,
+        never prefilled or decoded."""
+        queue = self.engine.queue
+        if not any(r.deadline is not None for r in queue):
+            return
+        now = time.monotonic()
+        keep = []
+        for req in queue:
+            if req.deadline is not None and now > req.deadline:
+                req.state = State.EXPIRED
+                req.t_done = now
+                self.n_expired += 1
+            else:
+                keep.append(req)
+        queue[:] = keep
+
+    def _deliver(self) -> None:
+        for h in self._live:
+            h._deliver()
+        self._live = [h for h in self._live if not h.done]
+
+    def step(self) -> bool:
+        """One engine iteration (admit -> iterative dispatch -> decode) +
+        token delivery.  Returns True while work remains.  Idle calls are
+        free: nothing is dispatched and no metrics move."""
+        eng = self.engine
+        self._expire()
+        if not (eng.queue or eng.active):
+            self._deliver()
+            return False
+        eng._admit()
+        eng._dispatch_iterative(
+            force=not any(r.state is State.DECODE
+                          for r in eng.active.values()))
+        eng._decode_step()
+        self._deliver()
+        return bool(eng.queue or eng.active)
+
+    def run_until_idle(self, max_steps: int = 10000) -> None:
+        """Drain all submitted work (the closed-loop tail)."""
+        steps = 0
+        while steps < max_steps and self.step():
+            steps += 1
+        self.engine._dispatch_iterative(force=True)
+        self._deliver()
+
+    # ---------------- arrival drivers --------------------------------------
+
+    def replay(self, questions, offsets, *, max_new_tokens=None,
+               deadline: float | None = None, on_token=None,
+               max_steps: int = 1_000_000) -> list[RequestHandle]:
+        """Open-loop trace replay against the wall clock: submission ``i``
+        arrives at ``offsets[i]`` seconds after the replay starts whether
+        or not earlier requests finished (RAGPulse-style).  ``deadline``
+        is relative seconds from each request's arrival."""
+        offsets = np.asarray(offsets, float)
+        t0 = time.monotonic()
+        handles: list[RequestHandle] = []
+        i, steps = 0, 0
+        while (i < len(questions)
+               or self.engine.queue or self.engine.active):
+            now = time.monotonic()
+            while i < len(questions) and t0 + offsets[i] <= now:
+                at = t0 + float(offsets[i])
+                handles.append(self.submit(
+                    questions[i], max_new_tokens=max_new_tokens,
+                    deadline=(at + deadline) if deadline is not None
+                    else None,
+                    arrival_time=at, on_token=on_token))
+                i += 1
+            if not self.step() and i < len(questions):
+                # idle until the next arrival (poll at most every 5 ms)
+                time.sleep(max(0.0, min(
+                    t0 + offsets[i] - time.monotonic(), 0.005)))
+            steps += 1
+            if steps >= max_steps:
+                break
+        self.engine._dispatch_iterative(force=True)
+        self._deliver()
+        return handles
+
+    # ---------------- reporting --------------------------------------------
+
+    def summary(self) -> dict:
+        """Aggregate serving stats over everything submitted so far."""
+        reqs = [h.request for h in self.handles.values()]
+        done = [r for r in reqs if r.state is State.DONE]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [(r.latency - r.ttft) / (len(r.output) - 1)
+                 for r in done if r.ttft is not None and len(r.output) > 1]
+        span = (max((r.t_done for r in done), default=0.0)
+                - min((r.t_arrive for r in reqs), default=0.0))
+        return {
+            "n_submitted": len(reqs),
+            "n_done": len(done),
+            "n_expired": self.n_expired,
+            "qps": len(done) / span if span > 0 else 0.0,
+            "ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "tpot_s": float(np.mean(tpots)) if tpots else None,
+        }
+
+
+def poisson_offsets(rate_qps: float, n: int, seed: int = 0) -> np.ndarray:
+    """Cumulative arrival offsets (seconds) of a Poisson process at
+    ``rate_qps`` -- the open-loop traffic model."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))

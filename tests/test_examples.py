@@ -1,0 +1,44 @@
+"""Examples smoke tier: every ``examples/*.py`` must run end to end under
+``JAX_PLATFORMS=cpu`` -- API redesigns cannot silently break the
+documented entry points again."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.slow        # each example builds models / engines
+
+REPO = Path(__file__).resolve().parent.parent
+
+# example -> extra argv (keep runtimes CI-sized)
+EXAMPLES = {
+    "quickstart.py": [],
+    "extended_pipeline.py": [],
+    "serve_rag.py": [],
+    "iterative_rag.py": [],
+    "train_lm.py": ["--steps", "30"],
+}
+
+
+def test_every_example_is_covered():
+    on_disk = {p.name for p in (REPO / "examples").glob("*.py")}
+    assert on_disk == set(EXAMPLES), (
+        "examples/ changed; update EXAMPLES in tests/test_examples.py")
+
+
+@pytest.mark.parametrize("name", sorted(EXAMPLES))
+def test_example_runs(name, tmp_path):
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    args = list(EXAMPLES[name])
+    if name == "train_lm.py":
+        args += ["--ckpt", str(tmp_path / "ckpt")]
+    res = subprocess.run(
+        [sys.executable, str(REPO / "examples" / name), *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, (
+        f"{name} failed:\n{res.stdout[-1000:]}\n{res.stderr[-2000:]}")
+    assert res.stdout.strip(), f"{name} produced no output"

@@ -1,0 +1,219 @@
+"""Open-loop RAGServer: legacy serve() parity, per-token streaming,
+deadlines, the Request/State lifecycle contract, trace replay, and the
+per-stage wall-time accounting."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import topical_corpus
+from repro.models import transformer as tr
+from repro.serving.engine import Component, EngineConfig, RAGEngine
+from repro.serving.request import (LEGAL_TRANSITIONS, TERMINAL_STATES,
+                                   Request, State)
+from repro.serving.server import RAGServer, poisson_offsets
+
+pytestmark = pytest.mark.slow        # jit-compiles per engine instance
+
+VOCAB = 128
+
+
+def _component(seed, causal=True, d=48):
+    cfg = tr.TransformerConfig(name=f"s{seed}", n_layers=2, d_model=d,
+                               n_heads=4, n_kv_heads=2, d_head=16, d_ff=64,
+                               vocab_size=VOCAB, causal=causal)
+    return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+
+@pytest.fixture(scope="module")
+def stack():
+    gen = _component(0)
+    enc = _component(1, causal=False, d=32)
+    corpus, topics, make_q = topical_corpus(48, 10, VOCAB, n_topics=4)
+    return gen, enc, corpus, topics, make_q
+
+
+def _engine(stack, **kw):
+    gen, enc, corpus, _, _ = stack
+    kw.setdefault("decode_slots", 2)
+    kw.setdefault("s_max", 96)
+    kw.setdefault("max_new_tokens", 5)
+    return RAGEngine(gen, enc, corpus, EngineConfig(**kw))
+
+
+def assert_legal_lifecycle(req: Request) -> None:
+    hist = req.state_history
+    assert hist[0] is State.QUEUED
+    for a, b in zip(hist, hist[1:]):
+        assert b in LEGAL_TRANSITIONS[a], \
+            f"illegal transition {a} -> {b} in {hist}"
+    assert req.state in TERMINAL_STATES
+
+
+# ---------------------------------------------------------------------------
+# Parity with the legacy closed-batch API (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_serve_wrapper_parity_with_server(stack):
+    """RAGEngine.serve(list) is token-for-token identical to submitting
+    the same questions to a RAGServer and draining it."""
+    _, _, _, _, make_q = stack
+    questions = [make_q(i % 4) for i in range(5)]
+
+    legacy = _engine(stack, decode_slots=3)
+    reqs = [Request(question=q.copy()) for q in questions]
+    legacy.serve(reqs)
+
+    srv = RAGServer(_engine(stack, decode_slots=3))
+    handles = [srv.submit(q.copy()) for q in questions]
+    srv.run_until_idle()
+
+    assert [r.output for r in reqs] == [h.output for h in handles]
+    assert all(h.state is State.DONE for h in handles)
+
+
+def test_serve_wrapper_parity_iterative(stack):
+    """Parity holds through iterative retrieval (WAIT_RETRIEVAL stalls and
+    batched mid-decode dispatches reorder nothing)."""
+    _, _, _, _, make_q = stack
+    questions = [make_q(i % 4) for i in range(3)]
+    kw = dict(max_new_tokens=9, iterative_interval=3, retrieval_batch=2)
+
+    legacy = _engine(stack, **kw)
+    reqs = [Request(question=q.copy()) for q in questions]
+    legacy.serve(reqs)
+    assert all(r.retrievals_done >= 1 for r in reqs)
+
+    srv = RAGServer(_engine(stack, **kw))
+    handles = [srv.submit(q.copy()) for q in questions]
+    srv.run_until_idle()
+    assert [r.output for r in reqs] == [h.output for h in handles]
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+
+def test_streaming_token_order_matches_output(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack))
+    seen = []
+    h1 = srv.submit(make_q(0), on_token=lambda h, t: seen.append((h.rid, t)))
+    h2 = srv.submit(make_q(1))
+    # iterating one handle drives the whole server
+    streamed = list(h2.tokens())
+    srv.run_until_idle()
+    assert streamed == h2.request.output
+    assert h1.streamed == h1.request.output
+    assert [t for rid, t in seen if rid == h1.rid] == h1.request.output
+    assert len(h1.output) == len(h2.output) == 5
+
+
+def test_tokens_iterator_replays_after_completion(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack))
+    h = srv.submit(make_q(2), max_new_tokens=4)
+    srv.run_until_idle()
+    assert list(h.tokens()) == h.request.output
+    assert len(h.request.output) == 4
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_expired_request_never_decodes(stack):
+    _, _, _, _, make_q = stack
+    eng = _engine(stack)
+    srv = RAGServer(eng)
+    dead = srv.submit(make_q(0), deadline=time.monotonic() - 0.001)
+    live = srv.submit(make_q(1), deadline=time.monotonic() + 60.0)
+    srv.run_until_idle()
+    assert dead.state is State.EXPIRED
+    assert dead.output == [] and dead.streamed == []
+    assert dead.request.state_history == [State.QUEUED, State.EXPIRED]
+    assert live.state is State.DONE and len(live.output) == 5
+    # the expired request was never prefilled or decoded
+    assert eng.metrics["prefills"] == 1
+    assert srv.n_expired == 1
+    assert srv.summary()["n_expired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle contract
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_transitions_legal(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack, decode_slots=2, max_new_tokens=9,
+                            iterative_interval=3, retrieval_batch=2))
+    handles = [srv.submit(make_q(i % 4)) for i in range(4)]
+    srv.run_until_idle()
+    for h in handles:
+        assert_legal_lifecycle(h.request)
+        hist = h.request.state_history
+        # the canonical path ran: retrieval, prefill, decode, terminal
+        for must in (State.RETRIEVING, State.PREFILL, State.DECODE):
+            assert must in hist
+        # iterative retrievals stalled decode at least once somewhere
+    assert any(State.WAIT_RETRIEVAL in h.request.state_history
+               for h in handles)
+
+
+def test_lifecycle_with_rewrite_stage(stack):
+    gen, enc, corpus, _, make_q = stack
+    eng = RAGEngine(gen, enc, corpus,
+                    EngineConfig(decode_slots=1, s_max=96, max_new_tokens=3,
+                                 rewrite_tokens=3),
+                    rewriter=_component(7))
+    srv = RAGServer(eng)
+    h = srv.submit(make_q(1))
+    srv.run_until_idle()
+    assert_legal_lifecycle(h.request)
+    assert State.REWRITING in h.request.state_history
+
+
+# ---------------------------------------------------------------------------
+# Open-loop replay
+# ---------------------------------------------------------------------------
+
+def test_replay_open_loop_arrivals(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack, decode_slots=2))
+    questions = [make_q(i % 4) for i in range(4)]
+    offsets = [0.0, 0.01, 0.02, 0.4]
+    handles = srv.replay(questions, offsets, max_new_tokens=3)
+    assert all(h.state is State.DONE for h in handles)
+    # arrival stamps honor the trace, not completion order
+    arrivals = [h.request.t_arrive for h in handles]
+    assert arrivals == sorted(arrivals)
+    assert arrivals[3] - arrivals[0] >= 0.35
+    s = srv.summary()
+    assert s["n_done"] == s["n_submitted"] == 4
+    assert s["qps"] > 0 and s["ttft_s"] > 0
+
+
+def test_poisson_offsets_statistics():
+    offs = poisson_offsets(10.0, 2000, seed=3)
+    assert len(offs) == 2000
+    assert np.all(np.diff(offs) >= 0)
+    # mean inter-arrival ~ 1/rate
+    assert abs(np.mean(np.diff(offs)) - 0.1) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Per-stage wall-time accounting
+# ---------------------------------------------------------------------------
+
+def test_stage_time_accounting(stack):
+    gen, enc, corpus, _, make_q = stack
+    eng = RAGEngine(gen, enc, corpus,
+                    EngineConfig(decode_slots=2, s_max=96, max_new_tokens=6,
+                                 iterative_interval=3, retrieval_batch=1))
+    eng.serve([Request(question=make_q(i % 4)) for i in range(2)])
+    t = eng.metrics["stage_time_s"]
+    for stage in ("embed", "retrieve", "retrieval", "prefill", "decode",
+                  "append"):
+        assert t.get(stage, 0.0) > 0.0, f"no wall time for {stage}"

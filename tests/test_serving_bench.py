@@ -1,6 +1,8 @@
 """The serving benchmark harness itself is CI-covered: ``--smoke`` runs the
 baseline preset on a tiny corpus and must emit a well-formed
-BENCH_serving.json (QPS/TTFT/TPOT + recall + hot-path metrics)."""
+BENCH_serving.json (QPS/TTFT/TPOT + recall + hot-path metrics), the
+``--compare`` regression gate must pass against the run's own output, and
+``compare_results`` must catch fabricated regressions."""
 
 import json
 import os
@@ -13,6 +15,15 @@ import pytest
 pytestmark = pytest.mark.slow        # full engine build + jit in a subprocess
 
 REPO = Path(__file__).resolve().parent.parent
+
+
+def _bench_module():
+    sys.path.insert(0, str(REPO / "benchmarks"))
+    try:
+        import serving_bench
+    finally:
+        sys.path.pop(0)
+    return serving_bench
 
 
 def test_serving_bench_smoke(tmp_path):
@@ -42,3 +53,54 @@ def test_serving_bench_smoke(tmp_path):
         assert m["cache_copy_bytes"] == 0
     # the approximate backend must stay close to exact on the tiny corpus
     assert presets["baseline"]["ivfpq"]["recall_at_k_vs_exact"] >= 0.8
+    # per-stage wall-time accounting rides along in the metrics
+    for backend in ("exact", "ivfpq"):
+        t = presets["baseline"][backend]["metrics"]["stage_time_s"]
+        assert t["prefill"] > 0 and t["decode"] > 0
+
+    # the regression gate passes against the run's own output (CLI path,
+    # in-process: no second bench subprocess)
+    bench = _bench_module()
+    assert bench.compare_results(data, data) == []
+
+
+def test_compare_results_detects_regression():
+    bench = _bench_module()
+    prev = {"presets": {"baseline": {"exact": {"qps": 4.0, "tpot_s": 0.05}}}}
+
+    ok = {"presets": {"baseline": {"exact": {"qps": 3.8, "tpot_s": 0.055}}}}
+    assert bench.compare_results(ok, prev, tolerance=0.25) == []
+
+    slow = {"presets": {"baseline": {"exact": {"qps": 2.0,
+                                               "tpot_s": 0.05}}}}
+    regs = bench.compare_results(slow, prev, tolerance=0.25)
+    assert len(regs) == 1 and "qps" in regs[0]
+
+    laggy = {"presets": {"baseline": {"exact": {"qps": 4.0,
+                                                "tpot_s": 0.09}}}}
+    regs = bench.compare_results(laggy, prev, tolerance=0.25)
+    assert len(regs) == 1 and "tpot" in regs[0]
+
+    missing = {"presets": {}}
+    regs = bench.compare_results(missing, prev)
+    assert len(regs) == 1 and "missing" in regs[0]
+
+
+def test_compare_cli_exits_nonzero_on_regression(tmp_path):
+    """--compare is the slow-tier perf gate: against a fabricated faster
+    'previous' run the CLI must exit nonzero (smallest possible bench:
+    one preset, one backend)."""
+    prev = {"presets": {"baseline": {"exact": {"qps": 1e9,
+                                               "tpot_s": 1e-9}}}}
+    prev_file = tmp_path / "prev.json"
+    prev_file.write_text(json.dumps(prev))
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "serving_bench.py"),
+         "--smoke", "--backends", "exact",
+         "--out", str(tmp_path / "out.json"),
+         "--compare", str(prev_file)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode != 0
+    assert "PERF REGRESSION" in res.stderr

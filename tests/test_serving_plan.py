@@ -1,0 +1,181 @@
+"""Schema -> plan -> server loop: EngineConfig.from_schema derivation,
+ServingPlan mapping of optimizer PlanPoints onto engine knobs, and the
+end-to-end deploy of an optimizer-chosen plan via RAGServer.from_plan."""
+
+import numpy as np
+import pytest
+
+from repro.configs.rag_pipelines import PRESETS
+from repro.core import optimizer as opt
+from repro.core.hardware import SystemConfig, XPU_C
+from repro.core.ragschema import (case_I, case_III, case_IV, llm_only)
+from repro.core.serving_plan import ServingPlan
+from repro.core.stage_registry import REGISTRY
+
+SYS = SystemConfig(n_servers=2, xpu=XPU_C)       # 8-XPU budget: fast search
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig.from_schema: the registry covers every stage
+# ---------------------------------------------------------------------------
+
+def test_every_registry_stage_has_engine_knobs():
+    """Acceptance: from_schema covers every registered stage -- no stage's
+    engine configuration is hand-set outside the registry."""
+    for spec in REGISTRY.ordered():
+        assert spec.engine_knobs is not None, (
+            f"stage {spec.name!r} has no engine_knobs mapping")
+
+
+def test_from_schema_derives_stage_fields():
+    from repro.serving.engine import EngineConfig
+
+    cfg = EngineConfig.from_schema(case_IV("70B"))
+    s = case_IV("70B")
+    assert cfg.rewrite_tokens == s.rewriter_out_len
+    assert cfg.rerank is True
+    assert cfg.rerank_candidates == s.rerank_candidates
+    assert cfg.max_new_tokens == s.decode_len
+    assert cfg.s_max == s.prefix_len + s.decode_len
+
+    base = EngineConfig.from_schema(case_I())
+    assert base.rewrite_tokens == 0 and base.rerank is False
+    assert base.iterative_interval is None
+
+    it = EngineConfig.from_schema(case_III("70B", retrieval_frequency=4))
+    assert it.iterative_interval == case_III("70B").decode_len // 4
+
+    mq = EngineConfig.from_schema(PRESETS["multi_query"]())
+    assert mq.fanout_queries == 4
+
+    sf = EngineConfig.from_schema(PRESETS["safety_screened"]())
+    assert sf.safety_threshold == 0.0
+
+
+def test_from_schema_overrides_win():
+    from repro.serving.engine import EngineConfig
+    cfg = EngineConfig.from_schema(case_IV("70B"), rewrite_tokens=3,
+                                   decode_slots=2, s_max=96)
+    assert cfg.rewrite_tokens == 3
+    assert cfg.decode_slots == 2 and cfg.s_max == 96
+
+
+# ---------------------------------------------------------------------------
+# ServingPlan: PlanPoint -> engine knobs
+# ---------------------------------------------------------------------------
+
+def test_from_plan_point_maps_schedule():
+    schema = case_I()
+    plans = opt.enumerate_plans(schema, SYS)
+    best = opt.best_qps_per_chip(plans)
+    plan = ServingPlan.from_plan_point(schema, best)
+    assert plan.placement == best.placement
+    assert plan.group_chips == tuple(best.detail["group_chips"])
+    assert plan.decode_chips == best.detail["decode_chips"]
+    assert plan.n_servers == best.detail["n_servers"]
+    assert plan.stage_batches["decode"] >= 1
+    cfg = plan.engine_config()
+    # RAGO's decode batch becomes the continuous-batching slot count
+    assert cfg.decode_slots == plan.stage_batches["decode"]
+    # sub-linear scan fraction deploys the ANN backend
+    assert cfg.retrieval_backend == "ivfpq"
+    assert "ServingPlan[" in plan.describe()
+
+
+def test_iterative_plan_carries_iter_batch():
+    """The b_it RAGO picked (§6.1[III]) reaches the engine as the
+    iterative retrieval batch."""
+    schema = case_III("70B", retrieval_frequency=4)
+    plans = opt.enumerate_plans(schema, SYS)
+    best = opt.best_qps_per_chip(plans)
+    assert best.detail.get("iter_batch") is not None
+    plan = ServingPlan.from_plan_point(schema, best)
+    assert plan.iter_batch == best.detail["iter_batch"]
+    cfg = plan.engine_config()
+    assert cfg.retrieval_batch == plan.iter_batch
+    assert cfg.iterative_interval == schema.decode_len // 4
+
+
+def test_full_scan_schema_deploys_exact_backend():
+    from repro.core.ragschema import case_II
+    schema = case_II("70B", context_tokens=100_000)
+    plan = ServingPlan(schema=schema)
+    assert plan.engine_config().retrieval_backend == "exact"
+
+
+def test_optimize_objectives():
+    schema = llm_only("8B")
+    p_eff = ServingPlan.optimize(schema, SYS)
+    p_lat = ServingPlan.optimize(schema, SYS, objective="ttft")
+    assert p_lat.predicted["ttft"] <= p_eff.predicted["ttft"]
+    with pytest.raises(ValueError):
+        ServingPlan.optimize(schema, SYS, objective="qps^3")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: optimizer-chosen plan deploys and serves (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_plan_deploys_and_serves_end_to_end():
+    import jax
+
+    from repro.data.synthetic import topical_corpus
+    from repro.models import transformer as tr
+    from repro.serving.engine import Component
+    from repro.serving.request import State
+    from repro.serving.server import RAGServer
+
+    def mk(seed, causal=True, d=32):
+        cfg = tr.TransformerConfig(name=f"sp{seed}", n_layers=2, d_model=d,
+                                   n_heads=4, n_kv_heads=2, d_head=8,
+                                   d_ff=64, vocab_size=64, causal=causal)
+        return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+    schema = PRESETS["baseline"]()
+    plan = ServingPlan.optimize(schema, SYS)
+    corpus, _topics, make_q = topical_corpus(32, 8, 64, n_topics=4)
+    server = RAGServer.from_plan(
+        plan, mk(0), mk(1, causal=False), corpus,
+        decode_slots=2, s_max=64, retrieval_k=2, max_new_tokens=3)
+    handles = [server.submit(make_q(i % 4)) for i in range(3)]
+    server.run_until_idle()
+    assert all(h.state is State.DONE for h in handles)
+    assert all(len(h.output) == 3 for h in handles)
+    # the deployed engine executes exactly the schema's executable stages
+    assert [ex.name for ex in server.engine.executors] == ["retrieval"]
+
+
+@pytest.mark.slow
+def test_from_schema_engine_pipeline_matches_registry():
+    """Acceptance: an engine configured purely by EngineConfig.from_schema
+    runs exactly the executable subset of schema.stages() -- for every
+    preset."""
+    import jax
+
+    from repro.data.synthetic import topical_corpus
+    from repro.models import transformer as tr
+    from repro.serving.engine import Component, EngineConfig, RAGEngine
+
+    def mk(seed, causal=True, d=32):
+        cfg = tr.TransformerConfig(name=f"pm{seed}", n_layers=1, d_model=d,
+                                   n_heads=2, n_kv_heads=2, d_head=8,
+                                   d_ff=32, vocab_size=64, causal=causal)
+        return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+    corpus, _t, _q = topical_corpus(16, 8, 64, n_topics=2)
+    executable = {"rewrite", "multi_query", "retrieval", "rerank",
+                  "safety_filter"}
+    for name, make in PRESETS.items():
+        schema = make("8B")
+        cfg = EngineConfig.from_schema(schema, decode_slots=1, s_max=64,
+                                       retrieval_k=2, max_new_tokens=2)
+        engine = RAGEngine(
+            mk(0), mk(1, causal=False), corpus, cfg,
+            rewriter=mk(2) if schema.rewriter is not None else None,
+            reranker=(mk(3, causal=False)
+                      if schema.reranker is not None else None),
+            safety=(mk(4, causal=False)
+                    if schema.safety_model is not None else None))
+        assert [ex.name for ex in engine.executors] == \
+            [s for s in schema.stages() if s in executable], name
