@@ -26,6 +26,16 @@ def multi_query(generative: str = "8B", queries: int = 4) -> RAGSchema:
                      fanout_model=LLAMA3_1B)
 
 
+def iterative(generative: str = "8B", frequency: int = 4) -> RAGSchema:
+    """Iterative retrieval during decode (paper §5.3): ``frequency``
+    retrieval events spread over the generation.  The shape where the
+    disaggregated cluster's decode group does real mid-generation work
+    (retrieve + chunk append land on the decode engines, priced by the
+    stage's ``decode_stall``)."""
+    return RAGSchema(generative=MODELS[generative],
+                     retrieval_frequency=frequency)
+
+
 def safety_screened(generative: str = "70B") -> RAGSchema:
     """Encoder safety screen over the assembled prompt before prefill.
     The screening threshold lives in the schema (single source of truth):
@@ -46,6 +56,7 @@ def full_pipeline(generative: str = "70B", queries: int = 2) -> RAGSchema:
 
 PRESETS = {
     "baseline": baseline,
+    "iterative": iterative,
     "multi_query": multi_query,
     "safety_screened": safety_screened,
     "full_pipeline": full_pipeline,

@@ -229,3 +229,48 @@ def min_chips_for_weights(shape: ModelShape, xpu: XPUSpec) -> int:
     while n < need:
         n *= 2
     return n
+
+
+# ---------------------------------------------------------------------------
+# Measured-time calibration (the XPU-side sibling of
+# core/retrieval_model.calibrate_host)
+# ---------------------------------------------------------------------------
+
+def calibrate_xpu(xpu: XPUSpec, schema, stage_time_s: dict,
+                  n_prefills: int, *, n_chips: int = 1, batch: int = 1,
+                  max_iters: int = 8) -> XPUSpec:
+    """XPU spec with its efficiency factors fit to a measured per-stage
+    wall time.
+
+    ``stage_time_s`` is the engine's accounting
+    (``RAGEngine.metrics["stage_time_s"]``) and ``n_prefills`` the number
+    of prefills it accumulated over (``metrics["prefills"]``), so the
+    anchor observation is seconds per generative-model prefill of the
+    schema's ``prefix_len`` -- the stage the analytical model and the
+    engine both price directly.  ``flops_eff`` and ``mem_eff`` are scaled
+    by a common factor, fixed-point iterated until the analytical
+    :func:`prefill_perf` prediction matches the measurement (the roofline's
+    per-operator dispatch floor makes one closed-form step inexact), and
+    clamped to (0, 1].  Every plan subsequently priced with the returned
+    spec reflects the deployed system instead of the paper's MFU
+    constants -- the same contract as
+    :func:`repro.core.retrieval_model.calibrate_host` on the host side.
+    """
+    from dataclasses import replace as _replace
+    if n_prefills <= 0:
+        raise ValueError("n_prefills must be positive")
+    measured = stage_time_s.get("prefill", 0.0) / n_prefills
+    if measured <= 0:
+        raise ValueError("stage_time_s['prefill'] must be positive")
+    spec = xpu
+    for _ in range(max_iters):
+        pred = prefill_perf(schema.generative, spec, n_chips, batch,
+                            schema.prefix_len).latency
+        k = pred / measured
+        if 0.999 < k < 1.001:
+            break
+        spec = _replace(
+            spec,
+            flops_eff=min(max(spec.flops_eff * k, 1e-9), 1.0),
+            mem_eff=min(max(spec.mem_eff * k, 1e-9), 1.0))
+    return spec

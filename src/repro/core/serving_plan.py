@@ -31,6 +31,7 @@ that never deploy them.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -108,6 +109,27 @@ class ServingPlan:
                 "exact" if self.schema.scan_fraction >= 1.0 else "ivfpq")
         merged = {**derived, **self.engine_overrides, **overrides}
         return EngineConfig.from_schema(self.schema, **merged)
+
+    def group_sizes(self, max_per_group: int = 4) -> tuple[int, int]:
+        """Map the plan's chip split onto disaggregated engine-group sizes
+        ``(n_prefill, n_decode)`` for :class:`repro.serving.cluster.
+        RAGCluster`.
+
+        The optimizer allocates XPUs to pre-decode groups
+        (``group_chips``) and to the decode group (``decode_chips``); a
+        test-scale cluster cannot instantiate hundreds of chips, so the
+        *ratio* of the split is kept (reduced by gcd) and clamped to
+        ``max_per_group`` engines per group.  A plan with no allocation
+        detail deploys the minimal 1+1 cluster."""
+        pre = int(sum(self.group_chips)) or 1
+        dec = int(self.decode_chips) or 1
+        g = math.gcd(pre, dec)
+        n_p, n_d = pre // g, dec // g
+        scale = max(n_p, n_d)
+        if scale > max_per_group:
+            n_p = max(1, round(n_p * max_per_group / scale))
+            n_d = max(1, round(n_d * max_per_group / scale))
+        return n_p, n_d
 
     # ---------------- reporting --------------------------------------------
 

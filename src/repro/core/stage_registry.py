@@ -120,6 +120,29 @@ class StageRegistry:
         return [s.name for s in self.ordered()
                 if s.placement == XPU and s.enabled(schema)]
 
+    def group_for(self, name: str) -> str:
+        """Disaggregated-cluster routing: which engine group runs a stage.
+
+        Pre-decode stages (``xpu`` and ``host`` placements) execute on the
+        prefill group; ``decode``-anchored stages on the decode group.
+        Stages with a ``decode_stall`` (iterative retrieval, safety screen
+        over iteratively retrieved content) additionally re-run *inside*
+        the decode group mid-generation -- that recurrence is priced by
+        ``decode_stall`` and executed by the decode engines' iterative
+        dispatch, not by this initial-pass routing."""
+        spec = self.get(name)
+        return "decode" if spec.placement == DECODE else "prefill"
+
+    def route_groups(self, schema) -> dict[str, list[str]]:
+        """Ordered stage names per engine group for one schema -- the
+        cluster's placement contract (``repro.serving.cluster`` instantiates
+        one engine group per key)."""
+        out: dict[str, list[str]] = {"prefill": [], "decode": []}
+        for spec in self.ordered():
+            if spec.enabled(schema):
+                out[self.group_for(spec.name)].append(spec.name)
+        return out
+
     def engine_executors(self, engine) -> list:
         """Instantiate the executable pipeline for one engine: each spec's
         ``make_executor`` decides activation from the engine's components

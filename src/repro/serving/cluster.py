@@ -1,0 +1,309 @@
+"""Disaggregated RAG serving cluster: prefill and decode engine groups
+connected by an explicit KV-cache handoff.
+
+RAGO's headline optimization axis is *task placement* -- whether the
+pre-decode stages (rewrite, embed/retrieve, rerank, safety, prefill) share
+chips with the continuous-batching decode loop or run on their own group.
+``ServingPlan`` records that decision (``placement`` + the chip split);
+:class:`RAGCluster` instantiates it: N prefill engines run every
+prefill-group stage of the registry's routing
+(``REGISTRY.route_groups(schema)``), M decode engines own decode slots and
+the mid-generation work (iterative retrieval dispatch + safety screening of
+iteratively retrieved content), and a finished prefill travels to a decode
+slot as an exported KV-cache prefix (``KVCachePool.export_slot`` /
+``import_slot`` -- bit-exact, so a 1+1 cluster is token-for-token identical
+to the collocated single-engine ``RAGServer``).
+
+Scheduling, per :meth:`RAGCluster.step`:
+
+* **SLO-aware admission** (at :meth:`submit`): a request whose deadline is
+  already unmeetable under the plan-predicted TTFT is shed immediately
+  (``State.EXPIRED`` before any compute).
+* **Least-loaded prefill dispatch**: each step hands at most one queued
+  request to each prefill engine, least cumulative prompt tokens first.
+* **Deadline-aware decode assignment**: handoffs wait in an
+  earliest-deadline-first queue; free decode slots go to the most urgent
+  request, on the decode engine with the most free slots.  A request whose
+  deadline passes while waiting here expires *between* the groups
+  (``PREFILL -> HANDOFF -> EXPIRED``) -- it was prefilled, never decoded.
+
+Requests are driven through the same open-loop front-end as the single
+engine: ``RAGServer(cluster)`` (or ``RAGServer.from_plan(...,
+topology="disagg")``) gives submission, streaming, deadlines and trace
+replay on top of this class.  Tail latency is first-class:
+:meth:`group_summary` reports p50/p95/p99 TTFT per prefill engine and
+p50/p95/p99 TPOT per decode engine, plus handoff traffic and shed counts.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core.stage_registry import REGISTRY
+from repro.serving.engine import RAGEngine
+from repro.serving.request import Request, State
+
+
+def percentiles(values, digits: int = 5) -> dict:
+    """p50/p95/p99 summary of a latency sample (empty -> None entries)."""
+    out = {}
+    for p in (50, 95, 99):
+        out[f"p{p}"] = (round(float(np.percentile(values, p)), digits)
+                        if len(values) else None)
+    return out
+
+
+class RAGCluster:
+    """A ServingPlan's placement, instantiated: prefill engines + decode
+    engines + the KV handoff and scheduler between them."""
+
+    def __init__(self, prefill_engines: list[RAGEngine],
+                 decode_engines: list[RAGEngine], *,
+                 predicted_ttft: float | None = None):
+        if not prefill_engines or not decode_engines:
+            raise ValueError("need at least one engine per group")
+        self.prefill_engines = list(prefill_engines)
+        self.decode_engines = list(decode_engines)
+        self.predicted_ttft = predicted_ttft
+        self.queue: list[Request] = []        # cluster admission queue
+        self.handoff: list[tuple] = []        # (req, kv_prefix, length, seq)
+        self._seq = 0                         # FIFO tiebreak for EDF
+        self._prefill_load = [0] * len(self.prefill_engines)
+        self.requests: list[Request] = []
+        # rid -> engine index within its group
+        self.prefill_of: dict[int, int] = {}
+        self.decode_of: dict[int, int] = {}
+        self.metrics = {"shed_requests": 0, "expired_queued": 0,
+                        "expired_in_handoff": 0, "handoffs": 0,
+                        "handoff_bytes": 0}
+
+    # ---------------- construction -----------------------------------------
+
+    @classmethod
+    def from_plan(cls, plan, generative, encoder, corpus_tokens, *,
+                  rewriter=None, reranker=None, safety=None,
+                  n_prefill: int | None = None, n_decode: int | None = None,
+                  **config_overrides) -> "RAGCluster":
+        """Instantiate a ServingPlan's placement as engine groups.
+
+        Group sizes default to the plan's chip split
+        (:meth:`~repro.core.serving_plan.ServingPlan.group_sizes`); the
+        offline corpus encode is shared across all engines.  Prefill
+        engines hold one staging slot each (a prefill's cache is exported
+        and the slot freed before the next admission); decode engines keep
+        the plan's full ``decode_slots``."""
+        cfg = plan.engine_config(**config_overrides)
+        p_default, d_default = plan.group_sizes()
+        n_p = n_prefill if n_prefill is not None else p_default
+        n_d = n_decode if n_decode is not None else d_default
+        kw = dict(rewriter=rewriter, reranker=reranker, safety=safety)
+        first = RAGEngine(generative, encoder, corpus_tokens,
+                          replace(cfg, decode_slots=1), **kw)
+        # one offline corpus encode and one built retrieval index serve
+        # the whole cluster
+        shared = dict(db_vectors=first.db_vectors, backend=first.backend,
+                      **kw)
+        prefill = [first] + [
+            RAGEngine(generative, encoder, corpus_tokens,
+                      replace(cfg, decode_slots=1), **shared)
+            for _ in range(n_p - 1)]
+        decode = [RAGEngine(generative, encoder, corpus_tokens, cfg,
+                            **shared) for _ in range(n_d)]
+        return cls(prefill, decode,
+                   predicted_ttft=plan.predicted.get("ttft"))
+
+    @property
+    def cfg(self):
+        """Reference config (deadline clamps, max_new_tokens defaults)."""
+        return self.decode_engines[0].cfg
+
+    # ---------------- admission (SLO-aware) --------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue one request; shed it instantly if the plan-predicted
+        TTFT says its deadline is already unmeetable (the optimizer's
+        prediction doing admission control)."""
+        self.requests.append(req)
+        if (req.deadline is not None and self.predicted_ttft is not None
+                and req.t_arrive + self.predicted_ttft > req.deadline):
+            req.state = State.EXPIRED
+            req.t_done = time.monotonic()
+            self.metrics["shed_requests"] += 1
+            return
+        self.queue.append(req)
+
+    # ---------------- scheduler phases -------------------------------------
+
+    def _expire(self, now: float) -> None:
+        """Deadline sweep over both waiting pools.  Requests already
+        holding a decode slot run to completion (same policy as the
+        single-engine server)."""
+        keep = []
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                req.state = State.EXPIRED
+                req.t_done = now
+                self.metrics["expired_queued"] += 1
+            else:
+                keep.append(req)
+        self.queue[:] = keep
+        kept = []
+        for item in self.handoff:
+            req = item[0]
+            if req.deadline is not None and now > req.deadline:
+                req.state = State.EXPIRED       # HANDOFF -> EXPIRED
+                req.t_done = now
+                self.metrics["expired_in_handoff"] += 1
+            else:
+                kept.append(item)
+        self.handoff[:] = kept
+
+    def _run_prefill(self, idx: int, req: Request) -> None:
+        """Full prefill-group pass on engine ``idx``: executors, prompt
+        assembly, bucketed prefill, then KV export + slot release.  The
+        request leaves in ``HANDOFF`` carrying its exported cache prefix."""
+        eng = self.prefill_engines[idx]
+        for ex in eng.executors:
+            with eng._timed(ex.name):
+                ex.run(eng, req)
+        req.prompt = eng._assemble_prompt(req)
+        slot = eng.pool.alloc(req.rid)
+        with eng._timed("prefill"):
+            eng.prefill_compute(req, slot)
+        kv, length = eng.pool.export_slot(slot)
+        eng.pool.release(slot)
+        req.state = State.HANDOFF
+        self.prefill_of[req.rid] = idx
+        self._prefill_load[idx] += len(req.prompt)
+        self.metrics["handoffs"] += 1
+        self.metrics["handoff_bytes"] += eng.pool.handoff_bytes(kv)
+        self.handoff.append((req, kv, length, self._seq))
+        self._seq += 1
+
+    def _dispatch_prefill(self) -> None:
+        """Least-loaded dispatch: at most one queued request per prefill
+        engine per step (load = cumulative prompt tokens processed), so a
+        burst saturates the whole group instead of head-of-line blocking
+        one engine."""
+        used: set[int] = set()
+        n = len(self.prefill_engines)
+        while self.queue and len(used) < n:
+            idx = min((i for i in range(n) if i not in used),
+                      key=lambda i: self._prefill_load[i])
+            self._run_prefill(idx, self.queue.pop(0))
+            used.add(idx)
+
+    def _assign_decode(self) -> None:
+        """Deadline-aware decode-slot assignment: earliest deadline first
+        (FIFO among deadline-free requests), each placed on the decode
+        engine with the most free slots."""
+        self.handoff.sort(key=lambda it: (
+            it[0].deadline if it[0].deadline is not None else float("inf"),
+            it[3]))
+        waiting = []
+        for item in self.handoff:
+            req, kv, length, _seq = item
+            idx = max(range(len(self.decode_engines)),
+                      key=lambda i: len(self.decode_engines[i].pool.free))
+            eng = self.decode_engines[idx]
+            if not eng.pool.free:
+                waiting.append(item)        # every engine is full
+                continue
+            slot = eng.pool.alloc(req.rid)
+            eng.pool.import_slot(slot, kv, length)
+            req.slot = slot
+            req.t_decode = time.monotonic()
+            req.state = State.DECODE
+            eng.active[slot] = req
+            self.decode_of[req.rid] = idx
+        self.handoff[:] = waiting
+
+    def _decode_tick(self) -> None:
+        """One decode iteration per busy decode engine (iterative
+        retrieval dispatch + fused decode step)."""
+        for eng in self.decode_engines:
+            if not (eng.active or eng.pending_retrievals):
+                continue
+            eng._dispatch_iterative(
+                force=not any(r.state is State.DECODE
+                              for r in eng.active.values()))
+            eng._decode_step()
+
+    # ---------------- driving ----------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue or self.handoff
+                    or any(e.active or e.pending_retrievals
+                           for e in self.decode_engines))
+
+    def step(self) -> bool:
+        """One cluster iteration: deadline sweep -> prefill dispatch ->
+        decode-slot assignment -> decode tick.  Returns True while work
+        remains anywhere in the cluster."""
+        self._expire(time.monotonic())
+        if not self.busy:
+            return False
+        self._dispatch_prefill()
+        self._assign_decode()
+        self._decode_tick()
+        return self.busy
+
+    def flush(self) -> None:
+        """Force out sub-batch iterative retrievals (drain tail)."""
+        for eng in self.decode_engines:
+            eng._dispatch_iterative(force=True)
+
+    # ---------------- tail-latency accounting ------------------------------
+
+    def group_summary(self) -> dict:
+        """Per-group and per-engine tail latency: TTFT is the prefill
+        group's product (arrival -> first token, wherever the request
+        later decoded), TPOT the decode group's -- measured from
+        decode-slot assignment (``t_decode``), so time spent waiting in
+        the handoff queue is charged to the scheduler, not to the decode
+        engine's per-token speed."""
+        by_prefill: dict[int, list] = {i: [] for i
+                                       in range(len(self.prefill_engines))}
+        by_decode: dict[int, list] = {i: [] for i
+                                      in range(len(self.decode_engines))}
+        for req in self.requests:
+            if req.ttft is not None and req.rid in self.prefill_of:
+                by_prefill[self.prefill_of[req.rid]].append(req.ttft)
+            if (req.state is State.DONE and req.t_decode is not None
+                    and len(req.output) > 1 and req.rid in self.decode_of):
+                by_decode[self.decode_of[req.rid]].append(
+                    (req.t_done - req.t_decode) / (len(req.output) - 1))
+        all_ttft = [t for v in by_prefill.values() for t in v]
+        all_tpot = [t for v in by_decode.values() for t in v]
+        return {
+            "prefill": {
+                "n_engines": len(self.prefill_engines),
+                "ttft_s": percentiles(all_ttft),
+                "per_engine": [
+                    {"n": len(by_prefill[i]),
+                     "ttft_s": percentiles(by_prefill[i])}
+                    for i in range(len(self.prefill_engines))],
+            },
+            "decode": {
+                "n_engines": len(self.decode_engines),
+                "tpot_s": percentiles(all_tpot),
+                "per_engine": [
+                    {"n": len(by_decode[i]),
+                     "tpot_s": percentiles(by_decode[i])}
+                    for i in range(len(self.decode_engines))],
+            },
+            "scheduler": dict(self.metrics),
+        }
+
+    def describe(self) -> str:
+        m = self.metrics
+        return (f"RAGCluster[{len(self.prefill_engines)} prefill + "
+                f"{len(self.decode_engines)} decode engines, "
+                f"{m['handoffs']} handoffs "
+                f"({m['handoff_bytes'] / 1e6:.2f} MB), "
+                f"shed {m['shed_requests']}, "
+                f"expired {m['expired_queued']}+{m['expired_in_handoff']}]")

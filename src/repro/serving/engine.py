@@ -121,8 +121,16 @@ class RAGEngine:
                  corpus_tokens: np.ndarray, cfg: EngineConfig,
                  rewriter: Component | None = None,
                  reranker: Component | None = None,
-                 safety: Component | None = None):
-        """corpus_tokens: (n_docs, doc_len) int32 database passages."""
+                 safety: Component | None = None,
+                 db_vectors: np.ndarray | None = None,
+                 backend=None):
+        """corpus_tokens: (n_docs, doc_len) int32 database passages.
+
+        ``db_vectors`` / ``backend`` let a multi-engine deployment
+        (``repro.serving.cluster``) share one offline corpus encode and
+        one built retrieval index across engines instead of re-embedding
+        / re-building per engine; they must come from an engine with the
+        same encoder component and retrieval config."""
         self.gen = generative
         self.enc = encoder
         self.rewriter = rewriter
@@ -147,10 +155,11 @@ class RAGEngine:
         self._prefill_jit = {}                   # bucket -> jitted prefill
         self._append_jit = {}                    # bucket -> jitted extend
         # database embeddings (the paper's offline encode step)
-        self.db_vectors = np.asarray(self._embed_batched(self.corpus))
-        self.backend = make_backend(cfg.retrieval_backend, self.db_vectors,
-                                    nprobe=cfg.nprobe,
-                                    use_pq_kernel=cfg.use_pq_kernel)
+        self.db_vectors = (np.asarray(db_vectors) if db_vectors is not None
+                           else np.asarray(self._embed_batched(self.corpus)))
+        self.backend = backend if backend is not None else make_backend(
+            cfg.retrieval_backend, self.db_vectors, nprobe=cfg.nprobe,
+            use_pq_kernel=cfg.use_pq_kernel)
         # executable pipeline, derived from the stage registry
         self.executors = REGISTRY.engine_executors(self)
 
@@ -219,11 +228,21 @@ class RAGEngine:
         return prompt[-max_prompt:].astype(np.int32)
 
     def _prefill(self, req: Request, slot: int) -> None:
+        """Collocated prefill: compute, then enter the decode loop.  A
+        disaggregated cluster calls :meth:`prefill_compute` directly and
+        transitions the request to ``HANDOFF`` instead."""
+        self.prefill_compute(req, slot)
+        req.state = State.DECODE
+        req.slot = slot
+
+    def prefill_compute(self, req: Request, slot: int) -> None:
         """Bucketed prefill: pad the prompt to the next power of two and run
         one jit-compiled full-logits forward per bucket.  Causality makes
         tail padding inert for positions < len(prompt); the first token's
         logits are read at position len(prompt)-1 and only the valid cache
-        prefix is installed in the slot."""
+        prefix is installed in the slot.  Leaves the request in ``PREFILL``
+        with its first token appended; the caller decides the next state
+        (``DECODE`` collocated, ``HANDOFF`` disaggregated)."""
         req.state = State.PREFILL
         prompt = req.prompt
         length = len(prompt)
@@ -243,8 +262,6 @@ class RAGEngine:
         self.metrics["host_syncs"] += 1
         req.output.append(tok)
         req.t_first_token = time.monotonic()
-        req.state = State.DECODE
-        req.slot = slot
         self.metrics["prefills"] += 1
 
     def _admit(self) -> None:

@@ -4,6 +4,13 @@ XLA needs static shapes, so the decode batch is a fixed pool of ``n_slots``
 sequences; per-slot lengths track validity and freed slots are recycled
 (Orca-style continuous batching at slot granularity).  The cache layout
 matches ``transformer.make_cache``: (L, B=n_slots, S_max, H_kv, D).
+
+``export_slot`` / ``import_slot`` move one request's cache prefix between
+pools -- the KV handoff of a disaggregated prefill/decode deployment
+(``repro.serving.cluster``).  The prefix travels as host numpy arrays in
+the pool's own dtype (bf16 via ml_dtypes), so a round trip is bit-exact:
+decoding from an imported prefix produces the same tokens as decoding in
+the pool that prefilled it.
 """
 
 from __future__ import annotations
@@ -48,6 +55,40 @@ class KVCachePool:
             k: self.cache[k].at[:, slot, :p].set(v[:, 0, :p])
             for k, v in layer_cache.items()}
         self.lengths[slot] = p
+
+    def export_slot(self, slot: int) -> tuple[dict, int]:
+        """Extract the slot's valid cache prefix for a KV handoff.
+
+        Returns ``({"k","v"}: (L, length, H_kv, D) host arrays, length)``
+        in the pool dtype -- no precision is lost in transit, so an
+        ``import_slot`` of the result is bit-exact."""
+        length = int(self.lengths[slot])
+        prefix = {k: np.asarray(v[:, slot, :length])
+                  for k, v in self.cache.items()}
+        return prefix, length
+
+    def import_slot(self, slot: int, prefix: dict, length: int) -> None:
+        """Install an exported cache prefix into a (freshly alloc'd) slot.
+
+        Raises if the prefix does not fit: truncating it would silently
+        decode from a corrupted context (the request's first token was
+        sampled at a position past the cut), breaking the bit-exact
+        handoff contract -- a cluster must pair pools of equal
+        ``s_max``."""
+        p = int(length)
+        if p > self.s_max:
+            raise ValueError(
+                f"cannot import a {p}-token cache prefix into a pool with "
+                f"s_max={self.s_max}; prefill and decode pools must agree")
+        self.cache = {
+            k: self.cache[k].at[:, slot, :p].set(jnp.asarray(prefix[k][:, :p]))
+            for k in self.cache}
+        self.lengths[slot] = p
+
+    @staticmethod
+    def handoff_bytes(prefix: dict) -> int:
+        """Payload size of one exported prefix (handoff traffic accounting)."""
+        return int(sum(v.nbytes for v in prefix.values()))
 
     def positions(self) -> jnp.ndarray:
         return jnp.asarray(self.lengths)

@@ -7,8 +7,16 @@ tests (and debugging) can assert the lifecycle against
     QUEUED -> [REWRITING] -> [RETRIEVING] -> PREFILL -> DECODE
            -> (WAIT_RETRIEVAL -> DECODE)* -> DONE
     QUEUED -> EXPIRED            (deadline passed before admission)
+    PREFILL -> HANDOFF -> DECODE | EXPIRED
+                                 (disaggregated cluster: prefill finished
+                                  on the prefill group, awaiting a decode
+                                  slot on the decode group)
 
-``EXPIRED`` requests are terminal: they are never prefilled or decoded.
+``EXPIRED`` requests are terminal and are never decoded.  A request that
+expires from ``QUEUED`` was never prefilled either; one that expires from
+``HANDOFF`` (deadline passed while queued between prefill completion and
+decode-slot assignment) carries its prefill-produced first token but no
+decode output.
 """
 
 from __future__ import annotations
@@ -27,10 +35,11 @@ class State(enum.Enum):
     REWRITING = "rewriting"
     RETRIEVING = "retrieving"
     PREFILL = "prefill"
+    HANDOFF = "handoff"                 # prefill done, awaiting decode slot
     DECODE = "decode"
     WAIT_RETRIEVAL = "wait_retrieval"   # iterative retrieval stall (§5.3)
     DONE = "done"
-    EXPIRED = "expired"                 # deadline passed before admission
+    EXPIRED = "expired"                 # deadline passed before decode
 
 
 #: Legal state transitions (rewrite / retrieval stages are optional, so
@@ -42,7 +51,8 @@ LEGAL_TRANSITIONS: dict[State, frozenset[State]] = {
                              State.PREFILL, State.EXPIRED}),
     State.REWRITING: frozenset({State.RETRIEVING, State.PREFILL}),
     State.RETRIEVING: frozenset({State.PREFILL}),
-    State.PREFILL: frozenset({State.DECODE}),
+    State.PREFILL: frozenset({State.DECODE, State.HANDOFF}),
+    State.HANDOFF: frozenset({State.DECODE, State.EXPIRED}),
     State.DECODE: frozenset({State.WAIT_RETRIEVAL, State.DONE}),
     State.WAIT_RETRIEVAL: frozenset({State.DECODE, State.DONE}),
     State.DONE: frozenset(),
@@ -71,6 +81,7 @@ class Request:
     # timestamps (engine clock, seconds)
     t_arrive: float = 0.0
     t_first_token: float | None = None
+    t_decode: float | None = None         # decode-slot assignment
     t_done: float | None = None
 
     def __setattr__(self, name, value):

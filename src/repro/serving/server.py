@@ -20,13 +20,24 @@ to the legacy closed-batch ``RAGEngine.serve(list)`` -- which is now a
 thin wrapper over this class.
 
 Arrival drivers: :func:`poisson_offsets` generates open-loop Poisson
-arrival times and :meth:`RAGServer.replay` replays any offset trace
-(RAGPulse-style) against the wall clock.
+arrival times, :meth:`RAGServer.replay` replays any offset trace against
+the wall clock, and :meth:`RAGServer.replay_trace` replays a JSONL
+arrival-trace file (``repro.serving.trace``) with per-request
+``max_new_tokens`` and deadlines.
 
 Deadlines are absolute engine-clock (``time.monotonic``) seconds.  A
 request whose deadline passes while it is still queued is marked
 ``State.EXPIRED`` and is never prefilled or decoded; requests already
 holding a decode slot run to completion.
+
+Topology: the server fronts either ONE collocated engine --
+``RAGServer(engine)``, every stage sharing the chips -- or a
+disaggregated :class:`~repro.serving.cluster.RAGCluster` --
+``RAGServer(cluster)`` / ``RAGServer.from_plan(..., topology="disagg")``
+-- where prefill and decode engine groups exchange requests through a
+KV-cache handoff.  Submission, streaming, deadline screening and replay
+are identical on both; the cluster adds SLO-aware admission and
+deadline-aware decode-slot scheduling underneath.
 """
 
 from __future__ import annotations
@@ -36,6 +47,7 @@ from typing import Callable, Iterator
 
 import numpy as np
 
+from repro.serving.cluster import RAGCluster, percentiles
 from repro.serving.request import Request, State
 
 
@@ -107,28 +119,61 @@ class RAGServer:
     shared continuously-batched :class:`RAGEngine`."""
 
     def __init__(self, engine):
-        self.engine = engine
+        """``engine``: a collocated :class:`~repro.serving.engine.RAGEngine`
+        or a disaggregated :class:`~repro.serving.cluster.RAGCluster`."""
+        self.cluster = engine if isinstance(engine, RAGCluster) else None
+        self.engine = None if self.cluster is not None else engine
         self.handles: dict[int, RequestHandle] = {}
         self._live: list[RequestHandle] = []
-        self.n_expired = 0
+
+    @property
+    def cfg(self):
+        return (self.cluster or self.engine).cfg
+
+    @property
+    def n_expired(self) -> int:
+        """Requests that reached EXPIRED anywhere (deadline screening,
+        SLO-aware shedding, or handoff-queue expiry)."""
+        return sum(1 for h in self.handles.values()
+                   if h.request.state is State.EXPIRED)
 
     # ---------------- deployment -------------------------------------------
 
     @classmethod
     def from_plan(cls, plan, generative, encoder, corpus_tokens, *,
                   rewriter=None, reranker=None, safety=None,
+                  topology: str = "single", n_prefill=None, n_decode=None,
                   **config_overrides) -> "RAGServer":
         """Deploy an optimizer-chosen :class:`~repro.core.serving_plan.
         ServingPlan`: the plan's schema + schedule become the engine
         configuration (``plan.engine_config()``), the caller supplies the
         concrete model components and corpus.  ``config_overrides`` win
-        last (e.g. test-scale clamps)."""
+        last (e.g. test-scale clamps).
+
+        ``topology="single"`` (default) runs every stage on one collocated
+        engine; ``topology="disagg"`` instantiates the plan's placement as
+        a :class:`~repro.serving.cluster.RAGCluster` (prefill + decode
+        engine groups sized by ``plan.group_sizes()`` unless
+        ``n_prefill``/``n_decode`` override them)."""
+        if topology in ("disagg", "disaggregated"):
+            cluster = RAGCluster.from_plan(
+                plan, generative, encoder, corpus_tokens,
+                rewriter=rewriter, reranker=reranker, safety=safety,
+                n_prefill=n_prefill, n_decode=n_decode, **config_overrides)
+            return cls(cluster)
+        if topology not in ("single", "collocated"):
+            raise ValueError(f"unknown topology {topology!r}")
         from repro.serving.engine import RAGEngine
         cfg = plan.engine_config(**config_overrides)
         engine = RAGEngine(generative, encoder, corpus_tokens, cfg,
                            rewriter=rewriter, reranker=reranker,
                            safety=safety)
         return cls(engine)
+
+    @classmethod
+    def from_cluster(cls, cluster: RAGCluster) -> "RAGServer":
+        """Open-loop front-end over an existing disaggregated cluster."""
+        return cls(cluster)
 
     # ---------------- submission -------------------------------------------
 
@@ -141,7 +186,7 @@ class RAGServer:
         req = Request(question=np.asarray(question, np.int32),
                       max_new_tokens=(max_new_tokens
                                       if max_new_tokens is not None
-                                      else self.engine.cfg.max_new_tokens),
+                                      else self.cfg.max_new_tokens),
                       deadline=deadline)
         return self.submit_request(req, arrival_time=arrival_time,
                                    on_token=on_token)
@@ -153,8 +198,11 @@ class RAGServer:
         req.t_arrive = (arrival_time if arrival_time is not None
                         else time.monotonic())
         req.max_new_tokens = min(req.max_new_tokens,
-                                 self.engine.cfg.max_new_tokens)
-        self.engine.queue.append(req)
+                                 self.cfg.max_new_tokens)
+        if self.cluster is not None:
+            self.cluster.submit(req)     # may shed (SLO-aware admission)
+        else:
+            self.engine.queue.append(req)
         handle = RequestHandle(self, req, on_token)
         self.handles[req.rid] = handle
         self._live.append(handle)
@@ -164,7 +212,8 @@ class RAGServer:
 
     def _expire(self) -> None:
         """Drop queued requests whose deadline has passed: marked EXPIRED,
-        never prefilled or decoded."""
+        never prefilled or decoded (single-engine path; the cluster runs
+        its own deadline sweep over both of its waiting pools)."""
         queue = self.engine.queue
         if not any(r.deadline is not None for r in queue):
             return
@@ -174,7 +223,6 @@ class RAGServer:
             if req.deadline is not None and now > req.deadline:
                 req.state = State.EXPIRED
                 req.t_done = now
-                self.n_expired += 1
             else:
                 keep.append(req)
         queue[:] = keep
@@ -185,9 +233,15 @@ class RAGServer:
         self._live = [h for h in self._live if not h.done]
 
     def step(self) -> bool:
-        """One engine iteration (admit -> iterative dispatch -> decode) +
-        token delivery.  Returns True while work remains.  Idle calls are
-        free: nothing is dispatched and no metrics move."""
+        """One serving iteration + token delivery.  Single engine: admit ->
+        iterative dispatch -> decode.  Cluster: deadline sweep -> prefill
+        dispatch -> KV handoff/decode-slot assignment -> decode tick.
+        Returns True while work remains.  Idle calls are free: nothing is
+        dispatched and no metrics move."""
+        if self.cluster is not None:
+            more = self.cluster.step()
+            self._deliver()
+            return more
         eng = self.engine
         self._expire()
         if not (eng.queue or eng.active):
@@ -201,53 +255,103 @@ class RAGServer:
         self._deliver()
         return bool(eng.queue or eng.active)
 
+    def _busy(self) -> bool:
+        if self.cluster is not None:
+            return self.cluster.busy
+        return bool(self.engine.queue or self.engine.active)
+
+    def _flush(self) -> None:
+        """Force out sub-batch iterative retrievals (drain tail)."""
+        if self.cluster is not None:
+            self.cluster.flush()
+        else:
+            self.engine._dispatch_iterative(force=True)
+
     def run_until_idle(self, max_steps: int = 10000) -> None:
         """Drain all submitted work (the closed-loop tail)."""
         steps = 0
         while steps < max_steps and self.step():
             steps += 1
-        self.engine._dispatch_iterative(force=True)
+        self._flush()
         self._deliver()
 
     # ---------------- arrival drivers --------------------------------------
 
     def replay(self, questions, offsets, *, max_new_tokens=None,
-               deadline: float | None = None, on_token=None,
+               deadline=None, on_token=None,
                max_steps: int = 1_000_000) -> list[RequestHandle]:
         """Open-loop trace replay against the wall clock: submission ``i``
         arrives at ``offsets[i]`` seconds after the replay starts whether
         or not earlier requests finished (RAGPulse-style).  ``deadline``
-        is relative seconds from each request's arrival."""
+        is relative seconds from each request's arrival.
+
+        ``max_new_tokens`` and ``deadline`` may be scalars (applied to
+        every request) or per-request sequences (entries may be None to
+        fall back to the server defaults) -- the latter is how JSONL
+        traces carry per-request fields."""
         offsets = np.asarray(offsets, float)
+        n = len(questions)
+
+        def per_request(v):
+            if v is None or np.isscalar(v):
+                return [v] * n
+            if len(v) != n:
+                raise ValueError(f"per-request field has {len(v)} entries "
+                                 f"for {n} questions")
+            return list(v)
+
+        mnt = per_request(max_new_tokens)
+        dls = per_request(deadline)
         t0 = time.monotonic()
         handles: list[RequestHandle] = []
         i, steps = 0, 0
-        while (i < len(questions)
-               or self.engine.queue or self.engine.active):
+        while i < n or self._busy():
             now = time.monotonic()
-            while i < len(questions) and t0 + offsets[i] <= now:
+            while i < n and t0 + offsets[i] <= now:
                 at = t0 + float(offsets[i])
                 handles.append(self.submit(
-                    questions[i], max_new_tokens=max_new_tokens,
-                    deadline=(at + deadline) if deadline is not None
-                    else None,
+                    questions[i], max_new_tokens=mnt[i],
+                    deadline=(at + dls[i]) if dls[i] is not None else None,
                     arrival_time=at, on_token=on_token))
                 i += 1
-            if not self.step() and i < len(questions):
+            if not self.step() and i < n:
                 # idle until the next arrival (poll at most every 5 ms)
                 time.sleep(max(0.0, min(
                     t0 + offsets[i] - time.monotonic(), 0.005)))
             steps += 1
             if steps >= max_steps:
                 break
-        self.engine._dispatch_iterative(force=True)
+        self._flush()
         self._deliver()
         return handles
+
+    def replay_trace(self, trace, *, on_token=None,
+                     max_new_tokens=None, deadline=None,
+                     max_steps: int = 1_000_000) -> list[RequestHandle]:
+        """Replay a JSONL arrival-trace file (or a list of
+        :class:`~repro.serving.trace.TraceEntry`) against the wall clock.
+        Per-entry ``max_new_tokens``/``deadline_s`` win over the
+        ``max_new_tokens``/``deadline`` defaults given here."""
+        from repro.serving.trace import TraceEntry, load_trace
+        if not (entries := trace if isinstance(trace, (list, tuple))
+                else load_trace(trace)):
+            return []
+        assert all(isinstance(e, TraceEntry) for e in entries)
+        return self.replay(
+            [e.question for e in entries],
+            [e.arrival_s for e in entries],
+            max_new_tokens=[e.max_new_tokens if e.max_new_tokens is not None
+                            else max_new_tokens for e in entries],
+            deadline=[e.deadline_s if e.deadline_s is not None
+                      else deadline for e in entries],
+            on_token=on_token, max_steps=max_steps)
 
     # ---------------- reporting --------------------------------------------
 
     def summary(self) -> dict:
-        """Aggregate serving stats over everything submitted so far."""
+        """Aggregate serving stats over everything submitted so far: means
+        plus the p50/p95/p99 tail (RAGPulse: only tail latency under real
+        traffic validates a plan)."""
         reqs = [h.request for h in self.handles.values()]
         done = [r for r in reqs if r.state is State.DONE]
         ttfts = [r.ttft for r in done if r.ttft is not None]
@@ -255,7 +359,7 @@ class RAGServer:
                  for r in done if r.ttft is not None and len(r.output) > 1]
         span = (max((r.t_done for r in done), default=0.0)
                 - min((r.t_arrive for r in reqs), default=0.0))
-        return {
+        out = {
             "n_submitted": len(reqs),
             "n_done": len(done),
             "n_expired": self.n_expired,
@@ -263,6 +367,10 @@ class RAGServer:
             "ttft_s": float(np.mean(ttfts)) if ttfts else None,
             "tpot_s": float(np.mean(tpots)) if tpots else None,
         }
+        for key, vals in (("ttft", ttfts), ("tpot", tpots)):
+            for p, v in percentiles(vals).items():
+                out[f"{key}_{p}_s"] = v
+        return out
 
 
 def poisson_offsets(rate_qps: float, n: int, seed: int = 0) -> np.ndarray:

@@ -1,0 +1,99 @@
+"""Arrival-trace files for open-loop replay (RAGPulse-style).
+
+Format: JSON Lines, one request per line::
+
+    {"arrival_s": 0.12, "question": [17, 3, ...],
+     "max_new_tokens": 8, "deadline_s": 2.0}
+
+``arrival_s`` is the offset (seconds) from replay start; ``question`` is
+the int token-id sequence; ``max_new_tokens`` and ``deadline_s`` (relative
+seconds from the request's arrival) are optional and fall back to the
+replay call's defaults.  Entries must be sorted by ``arrival_s``.
+
+``RAGServer.replay_trace(path_or_entries)`` replays a trace against the
+wall clock on either topology (single engine or disaggregated cluster);
+:func:`bursty_trace` synthesizes the on/off burst traffic real RAG serving
+sees (RAGPulse observes arrival processes far burstier than Poisson --
+only tail latency measured under such a trace validates a plan).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclass
+class TraceEntry:
+    arrival_s: float
+    question: np.ndarray                 # (q_len,) int32 token ids
+    max_new_tokens: int | None = None
+    deadline_s: float | None = None      # relative to this entry's arrival
+
+    def to_json(self) -> str:
+        rec = {"arrival_s": round(float(self.arrival_s), 6),
+               "question": [int(t) for t in self.question]}
+        if self.max_new_tokens is not None:
+            rec["max_new_tokens"] = int(self.max_new_tokens)
+        if self.deadline_s is not None:
+            rec["deadline_s"] = float(self.deadline_s)
+        return json.dumps(rec)
+
+
+def load_trace(path) -> list[TraceEntry]:
+    """Parse a JSONL arrival trace; validates ordering and field types."""
+    entries: list[TraceEntry] = []
+    for ln, line in enumerate(Path(path).read_text().splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        rec = json.loads(line)
+        try:
+            entry = TraceEntry(
+                arrival_s=float(rec["arrival_s"]),
+                question=np.asarray(rec["question"], np.int32),
+                max_new_tokens=(int(rec["max_new_tokens"])
+                                if "max_new_tokens" in rec else None),
+                deadline_s=(float(rec["deadline_s"])
+                            if "deadline_s" in rec else None))
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"{path}:{ln}: bad trace entry: {e}") from e
+        if entry.question.ndim != 1 or entry.question.size == 0:
+            raise ValueError(f"{path}:{ln}: question must be a non-empty "
+                             f"1-D token list")
+        if entries and entry.arrival_s < entries[-1].arrival_s:
+            raise ValueError(f"{path}:{ln}: arrivals must be sorted")
+        entries.append(entry)
+    return entries
+
+
+def save_trace(path, entries) -> None:
+    Path(path).write_text(
+        "".join(e.to_json() + "\n" for e in entries))
+
+
+def bursty_trace(n: int, vocab: int, *, q_len: int = 8,
+                 burst_rate: float = 20.0, idle_rate: float = 1.0,
+                 burst_len: int = 6, max_new_tokens: int | None = None,
+                 deadline_s: float | None = None,
+                 seed: int = 0) -> list[TraceEntry]:
+    """Synthesize an on/off bursty arrival trace: alternating bursts of
+    ``burst_len`` back-to-back arrivals at ``burst_rate`` QPS and quiet
+    gaps at ``idle_rate`` QPS -- the overdispersed traffic shape (far
+    burstier than Poisson at the same mean) that stresses admission and
+    decode-slot scheduling."""
+    rng = np.random.default_rng(seed)
+    entries, t = [], 0.0
+    for i in range(n):
+        in_burst = (i // burst_len) % 2 == 0
+        rate = burst_rate if in_burst else idle_rate
+        t += float(rng.exponential(1.0 / rate))
+        entries.append(TraceEntry(
+            arrival_s=t,
+            question=rng.integers(0, vocab, q_len).astype(np.int32),
+            max_new_tokens=max_new_tokens,
+            deadline_s=deadline_s))
+    return entries

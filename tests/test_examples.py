@@ -18,6 +18,7 @@ EXAMPLES = {
     "quickstart.py": [],
     "extended_pipeline.py": [],
     "serve_rag.py": [],
+    "serve_disagg.py": [],
     "iterative_rag.py": [],
     "train_lm.py": ["--steps", "30"],
 }

@@ -86,6 +86,34 @@ def test_compare_results_detects_regression():
     assert len(regs) == 1 and "missing" in regs[0]
 
 
+def test_compare_results_gates_p99_tail():
+    """A change that keeps the means but blows up the p99 tail fails the
+    gate (at 2x tolerance); within-headroom tail noise passes."""
+    bench = _bench_module()
+    prev = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05,
+        "ttft_p99_s": 0.2, "tpot_p99_s": 0.08}}}}
+
+    tail_ok = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05,
+        "ttft_p99_s": 0.28, "tpot_p99_s": 0.11}}}}     # < 2x0.25 growth
+    assert bench.compare_results(tail_ok, prev, tolerance=0.25) == []
+
+    tail_bad = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05,
+        "ttft_p99_s": 0.5, "tpot_p99_s": 0.2}}}}
+    regs = bench.compare_results(tail_bad, prev, tolerance=0.25)
+    assert len(regs) == 2
+    assert any("ttft_p99_s" in r for r in regs)
+    assert any("tpot_p99_s" in r for r in regs)
+
+    # old files without percentile fields are not gated on them
+    legacy_prev = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05}}}}
+    assert bench.compare_results(tail_bad, legacy_prev,
+                                 tolerance=0.25) == []
+
+
 def test_compare_cli_exits_nonzero_on_regression(tmp_path):
     """--compare is the slow-tier perf gate: against a fabricated faster
     'previous' run the CLI must exit nonzero (smallest possible bench:
