@@ -106,7 +106,10 @@ def _scale_clamps(cfg):
 def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int):
     """Stage enabling comes from the schema via the registry
     (EngineConfig.from_schema); only deployment/test-scale knobs are set
-    here."""
+    here.  Prefill stays monolithic (no ``prefill_chunk``): only the
+    monolithic bucketed prefill content-addresses pages, so this is the
+    path where the popular-question workload's prefix sharing
+    (``pages_shared``) shows up per row."""
     from repro.serving.engine import EngineConfig
     cfg = EngineConfig.from_schema(
         schema, decode_slots=4, s_max=s_max, retrieval_k=RETRIEVAL_K,
@@ -159,7 +162,9 @@ def run_preset(name: str, schema, backend: str, corpus, questions,
         "tokens_per_s": round(tokens / wall, 2),
         "recall_at_k_vs_exact": round(_recall_vs_exact(engine, questions), 4),
         "xpu_calibration": _xpu_calibration(schema, engine.metrics),
-        "metrics": dict(engine.metrics),
+        # engine counters + the paged pool's page accounting
+        # (pages_allocated / pages_shared / pages_cow / pages_evicted)
+        "metrics": engine.metrics_snapshot(),
     }
 
 
@@ -265,6 +270,18 @@ def run_optimized(name: str, schema, corpus, questions, max_new_tokens: int,
         # per-engine-group tail latency over everything this cluster served
         row["groups"] = server.cluster.group_summary()
         row["cluster"] = server.cluster.describe()
+        # page-granular KV handoff accounting, normalized per handoff so
+        # --compare can gate shipped bytes independently of request count
+        sched = row["groups"]["scheduler"]
+        n_handoffs = max(sched.get("handoffs", 0), 1)
+        row["handoff"] = {
+            "bytes": sched.get("handoff_bytes", 0),
+            "bytes_full": sched.get("handoff_bytes_full", 0),
+            "pages": sched.get("handoff_pages", 0),
+            "pages_shared": sched.get("handoff_pages_shared", 0),
+            "bytes_per_handoff": round(
+                sched.get("handoff_bytes", 0) / n_handoffs, 1),
+        }
     return row
 
 
@@ -277,8 +294,13 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     ``tolerance``, and the p99 TTFT/TPOT tails must not grow more than
     ``2 * tolerance`` (doubled: with bench-sized request counts the p99
     is the max sample, so it gets headroom -- but a change that only
-    hurts the tail still fails).  Returns human-readable regression
-    strings (empty == pass)."""
+    hurts the tail still fails).
+
+    Disaggregated ``optimized`` rows additionally gate the KV handoff:
+    shipped bytes per handoff must not grow more than ``tolerance`` vs
+    the previous run (skipped when either file predates the page-granular
+    handoff accounting).  Returns human-readable regression strings
+    (empty == pass)."""
     regressions = []
     gates = (("qps", "min", 1.0),
              ("tpot_s", "max", 1.0),
@@ -307,6 +329,21 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
                     regressions.append(
                         f"{preset}/{backend}: {key} {new[key]} {rel} "
                         f"{bound:.5f} (prev {old[key]}, tol {tol})")
+    for preset, old in prev.get("optimized", {}).items():
+        new = cur.get("optimized", {}).get(preset)
+        if new is None:
+            continue                      # topology/preset set may differ
+        old_h, new_h = old.get("handoff"), new.get("handoff")
+        if not old_h or not new_h:
+            continue                      # legacy file without handoff rows
+        key = "bytes_per_handoff"
+        if not old_h.get(key) or new_h.get(key) is None:
+            continue
+        bound = old_h[key] * (1.0 + tolerance)
+        if new_h[key] > bound:
+            regressions.append(
+                f"{preset}/optimized: handoff {key} {new_h[key]} > "
+                f"{bound:.1f} (prev {old_h[key]}, tol {tolerance})")
     return regressions
 
 
@@ -382,7 +419,12 @@ def main(argv=None) -> dict:
     backends = [s.strip() for s in args.backends.split(",")]
 
     corpus, _topics, make_q = topical_corpus(n_docs, 10, 128, n_topics=4)
-    questions = [make_q(i % 4, q_len=8) for i in range(n_requests)]
+    # A small pool of popular questions, cycled so repeats exist: repeated
+    # questions rebuild identical prefixes, which is what makes the paged
+    # pool's prefix sharing (pages_shared) and the cluster's page-deduped
+    # handoff (handoff_bytes < handoff_bytes_full) visible in the output.
+    popular = [make_q(t, q_len=8) for t in range(4)]
+    questions = [popular[i % 4] for i in range(n_requests)]
 
     results = {"meta": {
         "smoke": bool(args.smoke),

@@ -485,6 +485,173 @@ def make_cache(cfg: TransformerConfig, batch: int, s_max: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache entry points
+# ---------------------------------------------------------------------------
+#
+# Physical layout: {"k","v"}: (L, n_pages, page, H_kv, D) -- a flat pool of
+# fixed-size pages shared by every sequence.  A block table (B, M) int32 maps
+# logical page j of sequence b to a physical page; position p of sequence b
+# lives at physical row block_tables[b, p // page] * page + p % page.  Page
+# allocation, sharing and refcounts are host-side policy
+# (``repro.serving.kv_cache.PagedKVCachePool``); these kernels only scatter
+# new K/V into physical rows and attend over the gathered logical view
+# (B, M*page, H, D).  When M*page equals the dense s_max, the gathered view
+# has the same shape as a dense cache slice and masked softmax zeroes every
+# stale physical row exactly, so paged and dense decode agree token for
+# token.
+
+
+def make_paged_cache(cfg: TransformerConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_step(params: dict, cache: dict, token: jax.Array,
+                      pos: jax.Array, block_tables: jax.Array,
+                      cfg: TransformerConfig, compute_dtype=jnp.bfloat16,
+                      attn_impl=None, write_mask: jax.Array | None = None):
+    """One autoregressive step against a PAGED KV cache.
+
+    cache: {"k","v"}: (L, P, page, H_kv, D).  token/pos: (B,) int32 as in
+    :func:`decode_step`.  block_tables: (B, M) int32 physical page ids.
+    The new token's K/V scatters into physical position
+    ``block_tables[b, pos//page]*page + pos%page``; rows with
+    ``write_mask`` False (slots not stepping this tick) target the
+    out-of-bounds row ``P*page`` and are dropped, which replaces the
+    dense fused path's whole-cache step-mask merge.
+    """
+    B = token.shape[0]
+    _, P, page = cache["k"].shape[:3]
+    M = block_tables.shape[1]
+    embed = cm.maybe_dequant(params["embed"], compute_dtype)
+    x = jnp.take(embed, token, axis=0)[:, None, :]               # (B, 1, d)
+    page_log = pos // page
+    phys = jnp.take_along_axis(
+        block_tables, jnp.minimum(page_log, M - 1)[:, None], axis=1)[:, 0]
+    flat = phys * page + pos % page
+    flat = jnp.where(page_log < M, flat, P * page)     # OOB write -> dropped
+    if write_mask is not None:
+        flat = jnp.where(write_mask, flat, P * page)
+    attn = attn_impl
+    if attn is None:
+        def attn(q, kc, vc, cache_len):
+            kr = cm.repeat_kv(kc, cfg.q_per_kv)
+            vr = cm.repeat_kv(vc, cfg.q_per_kv)
+            return cm.decode_attention_ref(q, kr, vr, cache_len)
+
+    def layer_fn(x, scanned):
+        lp, kc, vc = scanned                           # (P, page, H_kv, D)
+        xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(xn, lp, cfg, pos[:, None], compute_dtype)
+        kf = kc.astype(compute_dtype).reshape(
+            P * page, cfg.n_kv_heads, cfg.d_head)
+        vf = vc.astype(compute_dtype).reshape(
+            P * page, cfg.n_kv_heads, cfg.d_head)
+        kf = kf.at[flat].set(k_new[:, 0], mode="drop")
+        vf = vf.at[flat].set(v_new[:, 0], mode="drop")
+        # gather each sequence's logical view: (B, M, page, H, D)
+        kg = kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_tables]
+        vg = vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_tables]
+        kg = kg.reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
+        vg = vg.reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
+        out = attn(q, kg, vg, pos + 1)
+        wo = cm.maybe_dequant(lp["wo"], compute_dtype)
+        x = x + (out.reshape(B, 1, cfg.n_heads * cfg.d_head)
+                 @ wo).astype(x.dtype)
+        xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_ffn(xn, lp, cfg, compute_dtype)
+        else:
+            h = dense_ffn(xn, lp, compute_dtype, cfg.ffn_type)
+        return x + h, (kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head),
+                       vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head))
+
+    (x), caches = jax.lax.scan(
+        layer_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = cm.maybe_dequant(params["head"], compute_dtype)
+    logits = (x.astype(compute_dtype) @ head)[:, 0]              # (B, V)
+    return logits, {"k": caches[0], "v": caches[1]}
+
+
+def paged_chunk_extend(params: dict, cache: dict, block_row: jax.Array,
+                       tokens: jax.Array, start_pos: jax.Array,
+                       n_valid: jax.Array, cfg: TransformerConfig,
+                       compute_dtype=jnp.bfloat16):
+    """Extend ONE sequence's paged cache with a chunk of tokens.
+
+    The paged counterpart of :func:`chunk_extend` -- block_row: (M,) int32,
+    the sequence's page table row.  Chunk token i scatters into the
+    physical row of position ``start_pos + i`` (pad rows and positions
+    past the table drop out of bounds) and attends over the gathered
+    logical view, so the result matches feeding the tokens one decode
+    step at a time.
+
+    Unlike the dense version it also returns the last valid row's
+    next-token logits: chunked prefill consumes a prompt piece by piece
+    across decode ticks and reads the request's first token from the
+    final chunk, so appended retrieval context and chunked prompt prefill
+    share this one bucketed program.
+    """
+    _, P, page = cache["k"].shape[:3]
+    M = block_row.shape[0]
+    S = M * page
+    T = tokens.shape[0]
+    embed = cm.maybe_dequant(params["embed"], compute_dtype)
+    x = jnp.take(embed, tokens, axis=0)[None]                 # (1, T, d)
+    offs = jnp.arange(T, dtype=jnp.int32)
+    positions = (start_pos + offs)[None]                      # (1, T)
+    page_log = (start_pos + offs) // page
+    phys = block_row[jnp.minimum(page_log, M - 1)]
+    flat = phys * page + (start_pos + offs) % page
+    flat = jnp.where((offs < n_valid) & (page_log < M), flat, P * page)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+
+    def layer_fn(x, scanned):
+        lp, kc, vc = scanned                           # (P, page, H_kv, D)
+        xn = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(xn, lp, cfg, positions, compute_dtype)
+        kf = kc.astype(compute_dtype).reshape(
+            P * page, cfg.n_kv_heads, cfg.d_head)
+        vf = vc.astype(compute_dtype).reshape(
+            P * page, cfg.n_kv_heads, cfg.d_head)
+        kf = kf.at[flat].set(k_new[0], mode="drop")
+        vf = vf.at[flat].set(v_new[0], mode="drop")
+        kg = kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_row]
+        vg = vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_row]
+        kr = cm.repeat_kv(kg.reshape(1, S, cfg.n_kv_heads, cfg.d_head),
+                          cfg.q_per_kv)
+        vr = cm.repeat_kv(vg.reshape(1, S, cfg.n_kv_heads, cfg.d_head),
+                          cfg.q_per_kv)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(
+            jnp.float32) * scale
+        mask = jnp.arange(S)[None, None, None, :] <= \
+            positions[0][None, None, :, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+        wo = cm.maybe_dequant(lp["wo"], compute_dtype)
+        x = x + (out.reshape(1, T, cfg.n_heads * cfg.d_head)
+                 @ wo).astype(x.dtype)
+        xn = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_ffn(xn, lp, cfg, compute_dtype)
+        else:
+            h = dense_ffn(xn, lp, compute_dtype, cfg.ffn_type)
+        return x + h, (kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head),
+                       vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head))
+
+    (x), caches = jax.lax.scan(
+        layer_fn, x, (params["layers"], cache["k"], cache["v"]))
+    xf = cm.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = cm.maybe_dequant(params["head"], compute_dtype)
+    last = xf[0, jnp.maximum(n_valid - 1, 0)]
+    logits = last.astype(compute_dtype) @ head                # (V,)
+    return {"k": caches[0], "v": caches[1]}, logits
+
+
 def abstract_cache(cfg: TransformerConfig, batch: int, s_max: int,
                    dtype=jnp.bfloat16) -> dict:
     shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)

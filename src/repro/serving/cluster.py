@@ -10,9 +10,15 @@ prefill-group stage of the registry's routing
 (``REGISTRY.route_groups(schema)``), M decode engines own decode slots and
 the mid-generation work (iterative retrieval dispatch + safety screening of
 iteratively retrieved content), and a finished prefill travels to a decode
-slot as an exported KV-cache prefix (``KVCachePool.export_slot`` /
-``import_slot`` -- bit-exact, so a 1+1 cluster is token-for-token identical
-to the collocated single-engine ``RAGServer``).
+slot as an exported KV-cache prefix (``export_slot`` / ``import_slot`` --
+bit-exact, so a 1+1 cluster is token-for-token identical to the collocated
+single-engine ``RAGServer``).  With the default paged pools the handoff is
+page-granular: the payload carries per-page chain keys, the importing pool
+references pages its prefix cache already holds instead of writing them,
+and only the rest counts as shipped -- ``handoff_bytes`` (shipped, counted
+at decode-slot assignment) vs ``handoff_bytes_full`` (what a dense
+whole-prefix export would move), plus ``handoff_pages`` /
+``handoff_pages_shared`` page counts.
 
 Scheduling, per :meth:`RAGCluster.step`:
 
@@ -44,6 +50,7 @@ import numpy as np
 
 from repro.core.stage_registry import REGISTRY
 from repro.serving.engine import RAGEngine
+from repro.serving.kv_cache import payload_nbytes
 from repro.serving.request import Request, State
 
 
@@ -78,7 +85,13 @@ class RAGCluster:
         self.decode_of: dict[int, int] = {}
         self.metrics = {"shed_requests": 0, "expired_queued": 0,
                         "expired_in_handoff": 0, "handoffs": 0,
-                        "handoff_bytes": 0}
+                        # shipped at decode-slot assignment (import time):
+                        # pages the destination pool already cached are
+                        # referenced, not transferred
+                        "handoff_bytes": 0, "handoff_pages": 0,
+                        "handoff_pages_shared": 0,
+                        # what a dense whole-prefix export would have moved
+                        "handoff_bytes_full": 0}
 
     # ---------------- construction -----------------------------------------
 
@@ -179,7 +192,9 @@ class RAGCluster:
         self.prefill_of[req.rid] = idx
         self._prefill_load[idx] += len(req.prompt)
         self.metrics["handoffs"] += 1
-        self.metrics["handoff_bytes"] += eng.pool.handoff_bytes(kv)
+        # full payload accounted here; what actually ships is known only
+        # at import time (the destination may already cache some pages)
+        self.metrics["handoff_bytes_full"] += payload_nbytes(kv)
         self.handoff.append((req, kv, length, self._seq))
         self._seq += 1
 
@@ -213,7 +228,10 @@ class RAGCluster:
                 waiting.append(item)        # every engine is full
                 continue
             slot = eng.pool.alloc(req.rid)
-            eng.pool.import_slot(slot, kv, length)
+            stats = eng.pool.import_slot(slot, kv, length)
+            self.metrics["handoff_bytes"] += stats.nbytes
+            self.metrics["handoff_pages"] += stats.pages
+            self.metrics["handoff_pages_shared"] += stats.pages_shared
             req.slot = slot
             req.t_decode = time.monotonic()
             req.state = State.DECODE
@@ -304,6 +322,8 @@ class RAGCluster:
         return (f"RAGCluster[{len(self.prefill_engines)} prefill + "
                 f"{len(self.decode_engines)} decode engines, "
                 f"{m['handoffs']} handoffs "
-                f"({m['handoff_bytes'] / 1e6:.2f} MB), "
+                f"({m['handoff_bytes'] / 1e6:.2f} MB shipped of "
+                f"{m['handoff_bytes_full'] / 1e6:.2f} MB, "
+                f"{m['handoff_pages_shared']} pages deduped), "
                 f"shed {m['shed_requests']}, "
                 f"expired {m['expired_queued']}+{m['expired_in_handoff']}]")

@@ -21,21 +21,30 @@ Hot-path design:
 * Retrieval goes through a pluggable backend
   (``repro.retrieval.backend``): exact kNN or an IVF-PQ index built at
   construction, selected purely by ``EngineConfig.retrieval_backend``.
-* The decode step is fused: argmax sampling and the active-slot cache
-  merge run inside ONE jitted call with the cache donated to XLA, so each
-  token costs a single dispatch and a single (B,)-token device->host
-  transfer -- no host-side argmax, no full cache rebuild.  The pre-fusion
-  path is kept behind ``fused_decode=False`` for parity testing.
-* Iteratively retrieved context is appended in bucketed chunks
-  (``tr.chunk_extend``): one jitted forward per power-of-two chunk bucket
-  writes the slot's cache prefix directly, replacing the one-jit-per-token
-  loop.
+* KV state lives in a PAGED pool by default
+  (``repro.serving.kv_cache.PagedKVCachePool``): fixed-size pages with a
+  per-slot page table, content-addressed full pages shared across
+  requests that retrieved the same documents, and page-granular export /
+  import for disaggregated handoff.  ``paged=False`` (implied by
+  ``fused_decode=False``) keeps the dense slot pool for parity testing.
+* The decode step is fused: forward + argmax run inside ONE jitted call
+  with the cache donated to XLA, so each token costs a single dispatch
+  and a single (B,)-token device->host transfer.  On the paged pool,
+  slots that are not stepping scatter their write out of bounds (dropped)
+  instead of paying the dense path's whole-cache step-mask merge.
+* Iteratively retrieved context AND chunked prompt prefill share one
+  bucketed chunk-extend program (``tr.paged_chunk_extend``): one jitted
+  forward per power-of-two chunk bucket writes the slot's pages directly.
 
 The decode loop is slot-based (fixed shapes for XLA) with Orca-style
-continuous batching: finished sequences free their slot and queued requests
-are admitted with a fresh prefill.  Prompt lengths are bucketed to powers
-of two and each bucket's prefill is jit-compiled once, so compile count is
-bounded by the number of distinct buckets.
+continuous batching, per :meth:`RAGEngine.tick`: every tick admits queued
+requests into freed slots, advances chunk-prefilling slots by one prompt
+chunk (``prefill_chunk``; prefill work interleaves with decode instead of
+running ahead of it), dispatches due iterative retrievals and takes one
+decode step -- finished or at-capacity sequences release their slot inside
+the same tick.  Prompt lengths are bucketed to powers of two and each
+bucket's prefill is jit-compiled once, so compile count is bounded by the
+number of distinct buckets.
 
 ``metrics`` counts the transfers the hot path pays: ``host_syncs`` (the
 device->host copies made by the engine's own primitives -- one per prefill
@@ -61,7 +70,7 @@ import numpy as np
 from repro.core.stage_registry import REGISTRY
 from repro.models import transformer as tr
 from repro.retrieval.backend import make_backend
-from repro.serving.kv_cache import KVCachePool
+from repro.serving.kv_cache import KVCachePool, PagedKVCachePool
 from repro.serving.request import Request, State
 
 
@@ -91,6 +100,39 @@ class EngineConfig:
     use_pq_kernel: bool | None = None      # None = Pallas kernel on TPU only
     # decode-step fusion (False keeps the pre-fusion path for parity tests)
     fused_decode: bool = True
+    # paged KV cache + continuous batching
+    paged: bool = True                   # page-table pool (False: dense slots)
+    page_size: int = 16                  # tokens per KV page
+    kv_spare_pages: int | None = None    # extra pages kept as prefix cache
+    prefill_chunk: int | None = None     # >0: chunk prefill across ticks
+    iter_query_tokens: int = 8           # fixed iterative-query width
+
+    def __post_init__(self):
+        # the prompt budget s_max - max_new_tokens - 1 must be positive,
+        # otherwise _assemble_prompt's prompt[-budget:] keeps the WHOLE
+        # prompt and decode overflows the cache
+        if self.s_max <= self.max_new_tokens + 1:
+            raise ValueError(
+                f"s_max={self.s_max} must exceed max_new_tokens + 1 = "
+                f"{self.max_new_tokens + 1}: the prompt budget "
+                f"(s_max - max_new_tokens - 1) would be empty and decode "
+                f"would overflow the KV cache")
+        if self.page_size <= 0:
+            raise ValueError(f"page_size={self.page_size} must be positive")
+        if self.iter_query_tokens <= 0:
+            raise ValueError("iter_query_tokens must be positive")
+        if not self.fused_decode:
+            # the pre-fusion parity path predates paging; it decodes
+            # against the dense slot pool
+            self.paged = False
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk <= 0:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be positive")
+            if not self.paged:
+                raise ValueError(
+                    "chunked prefill requires the paged KV pool "
+                    "(paged=True with fused_decode=True)")
 
     @classmethod
     def from_schema(cls, schema, **overrides) -> "EngineConfig":
@@ -138,18 +180,27 @@ class RAGEngine:
         self.safety = safety
         self.cfg = cfg
         self.corpus = np.asarray(corpus_tokens)
-        self.pool = KVCachePool(generative.cfg, cfg.decode_slots, cfg.s_max)
+        self.pool = (PagedKVCachePool(generative.cfg, cfg.decode_slots,
+                                      cfg.s_max, page_size=cfg.page_size,
+                                      spare_pages=cfg.kv_spare_pages)
+                     if cfg.paged else
+                     KVCachePool(generative.cfg, cfg.decode_slots, cfg.s_max))
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}     # slot -> request
+        self.prefilling: dict[int, int] = {}     # slot -> prompt cursor
         self.pending_retrievals: list[Request] = []
         self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
                         "retrieval_batches": 0, "prefills": 0,
                         "prefill_compiles": 0, "append_compiles": 0,
                         "host_syncs": 0, "decode_host_syncs": 0,
-                        "cache_copy_bytes": 0, "stage_time_s": {}}
+                        "cache_copy_bytes": 0, "capacity_stops": 0,
+                        "stage_time_s": {}}
         self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
         self._fused_decode_jit = jax.jit(
             partial(self._fused_decode, cfg=self.gen.cfg),
+            donate_argnums=(1,))
+        self._paged_decode_jit = jax.jit(
+            partial(self._paged_fused_decode, cfg=self.gen.cfg),
             donate_argnums=(1,))
         self._encode_jit = jax.jit(partial(tr.encode, cfg=self.enc.cfg))
         self._prefill_jit = {}                   # bucket -> jitted prefill
@@ -256,7 +307,11 @@ class RAGEngine:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :length] = prompt
         logits, _aux, cache = fn(self.gen.params, jnp.asarray(padded))
-        self.pool.write_prefix(slot, cache, length)
+        # content-address full pages by prompt tokens + bucket: two prompts
+        # share a page only when the prefill math for those positions was
+        # the same compiled program on the same inputs (bit-identical K/V)
+        self.pool.write_prefix(slot, cache, length, tokens=prompt,
+                               key_salt=str(bucket).encode())
         tok = int(jnp.argmax(logits[0, length - 1,
                              :self.gen.cfg.vocab_size]))
         self.metrics["host_syncs"] += 1
@@ -272,9 +327,47 @@ class RAGEngine:
                     ex.run(self, req)
             req.prompt = self._assemble_prompt(req)
             slot = self.pool.alloc(req.rid)
-            with self._timed("prefill"):
-                self._prefill(req, slot)
-            self.active[req.slot] = req
+            if self.cfg.prefill_chunk:
+                # continuous batching: the slot enters PREFILL and the
+                # prompt streams in chunk-by-chunk across decode ticks
+                # (_prefill_tick) instead of monopolizing the engine
+                req.state = State.PREFILL
+                req.slot = slot
+                self.prefilling[slot] = 0
+                self.active[slot] = req
+            else:
+                with self._timed("prefill"):
+                    self._prefill(req, slot)
+                self.active[req.slot] = req
+
+    def _prefill_tick(self) -> None:
+        """Advance every chunk-prefilling slot by one prompt chunk.  The
+        final chunk's logits (at the last valid prompt row) yield the
+        request's first token, after which the slot joins the decode
+        batch -- prefill work interleaves with decode ticks instead of
+        running ahead of them.  Chunk-streamed pages are written
+        privately (unkeyed): only the monolithic prefill content-
+        addresses pages for prefix sharing."""
+        if not self.prefilling:
+            return
+        chunk = self.cfg.prefill_chunk
+        with self._timed("prefill"):
+            for slot, cursor in list(self.prefilling.items()):
+                req = self.active[slot]
+                piece = req.prompt[cursor:cursor + chunk]
+                logits = self._paged_extend(slot, piece)
+                cursor += len(piece)
+                if cursor >= len(req.prompt):
+                    del self.prefilling[slot]
+                    tok = int(jnp.argmax(
+                        logits[:self.gen.cfg.vocab_size]))
+                    self.metrics["host_syncs"] += 1
+                    req.output.append(tok)
+                    req.t_first_token = time.monotonic()
+                    self.metrics["prefills"] += 1
+                    req.state = State.DECODE
+                else:
+                    self.prefilling[slot] = cursor
 
     # ---------------- decode loop ------------------------------------------
 
@@ -287,6 +380,9 @@ class RAGEngine:
         an n-token append costs one dispatch instead of n decode steps."""
         t = len(tokens)
         if t == 0:
+            return
+        if isinstance(self.pool, PagedKVCachePool):
+            self._paged_extend(slot, np.asarray(tokens, np.int32))
             return
         bucket = bucket_len(t)
         fn = self._append_jit.get(bucket)
@@ -304,15 +400,54 @@ class RAGEngine:
             jnp.asarray(t, jnp.int32))
         self.pool.lengths[slot] += t
 
+    def _paged_extend(self, slot: int, tokens: np.ndarray) -> jnp.ndarray:
+        """Bucketed paged chunk extend: allocate/COW the pages the write
+        range touches, then one jitted ``tr.paged_chunk_extend`` per
+        power-of-two bucket scatters the chunk into them.  Returns the
+        last valid row's logits (device array; only chunked prefill's
+        final chunk reads them -- appends leave them unfetched, costing
+        no sync)."""
+        t = len(tokens)
+        self.pool.prepare_append(slot, t)
+        bucket = bucket_len(t)
+        fn = self._append_jit.get(bucket)
+        if fn is None:
+            fn = jax.jit(partial(tr.paged_chunk_extend, cfg=self.gen.cfg),
+                         donate_argnums=(1,))
+            self._append_jit[bucket] = fn
+            self.metrics["append_compiles"] += 1
+        padded = np.zeros(bucket, np.int32)
+        padded[:t] = tokens
+        self.pool.cache, logits = fn(
+            self.gen.params, self.pool.cache,
+            jnp.asarray(self.pool.block_row(slot)), jnp.asarray(padded),
+            jnp.asarray(self.pool.lengths[slot], jnp.int32),
+            jnp.asarray(t, jnp.int32))
+        self.pool.lengths[slot] += t
+        return logits
+
+    def _iter_query(self, req: Request) -> np.ndarray:
+        """Fixed-width iterative-retrieval query: the last
+        ``iter_query_tokens`` generated tokens, falling back to the tail
+        of the question, left-padded to a constant width -- mixed-source
+        batches stack into one rectangular array (a ragged mix used to
+        crash ``np.stack`` whenever retrieval_batch > 1 paired a
+        generated-token query with a different-length question)."""
+        w = self.cfg.iter_query_tokens
+        src = (np.asarray(req.output[-w:], np.int32)
+               if len(req.output) >= w
+               else np.asarray(req.question[-w:], np.int32))
+        if len(src) < w:
+            src = np.pad(src, (w - len(src), 0))
+        return src
+
     def _dispatch_iterative(self, force: bool = False) -> None:
         r = self.cfg.retrieval_batch
         while (len(self.pending_retrievals) >= r
                or (force and self.pending_retrievals)):
             batch = self.pending_retrievals[:r]
             self.pending_retrievals = self.pending_retrievals[r:]
-            qs = np.stack([np.asarray(req.output[-8:], np.int32)
-                           if len(req.output) >= 8 else req.question
-                           for req in batch])
+            qs = np.stack([self._iter_query(req) for req in batch])
             ids = self.retrieve(qs, 1)
             self.metrics["retrieval_batches"] += 1
             for req, docs in zip(batch, ids):
@@ -331,7 +466,14 @@ class RAGEngine:
                 req.retrievals_done += 1
                 if len(docs):
                     new_ctx = self.corpus[docs[0]]
-                    room = self.pool.s_max - self.pool.lengths[req.slot] - 2
+                    # reserve one cache position per remaining decode step
+                    # (each step writes the previous token's K/V), so the
+                    # append can never push decode writes past s_max -- the
+                    # old fixed 2-token headroom let lengths overrun the
+                    # cache and silently corrupt the context
+                    remaining = req.max_new_tokens - len(req.output)
+                    room = (self.pool.s_max
+                            - int(self.pool.lengths[req.slot]) - remaining)
                     if room > 0:
                         with self._timed("append"):
                             self._append_tokens(req.slot, new_ctx[:room])
@@ -353,13 +495,38 @@ class RAGEngine:
             lambda new, old: jnp.where(mask, new, old), new_cache, cache)
         return tokens.astype(jnp.int32), merged
 
+    @staticmethod
+    def _paged_fused_decode(params, cache, token_vec, positions,
+                            block_tables, step_mask, *, cfg):
+        """Fused decode against the paged pool: forward + argmax in one
+        donated XLA program.  No step-mask cache merge is needed -- slots
+        that are not stepping simply scatter their K/V write out of
+        bounds (dropped), so the page pool is never touched for them."""
+        logits, cache = tr.paged_decode_step(
+            params, cache, token_vec, positions, block_tables, cfg,
+            write_mask=step_mask)
+        tokens = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        return tokens.astype(jnp.int32), cache
+
     def _decode_step(self) -> None:
         token_vec = np.zeros(self.pool.n_slots, np.int32)
-        stepping = []
+        stepping, at_capacity = [], []
         for slot, req in self.active.items():
-            if req.state is State.DECODE:
-                token_vec[slot] = req.output[-1]
-                stepping.append(slot)
+            if req.state is not State.DECODE:
+                continue
+            if self.pool.lengths[slot] >= self.pool.s_max:
+                # the next step would write K/V past s_max (silently
+                # dropped, corrupting the context): finish at capacity
+                at_capacity.append(slot)
+                continue
+            token_vec[slot] = req.output[-1]
+            stepping.append(slot)
+        for slot in at_capacity:
+            req = self.active.pop(slot)
+            req.state = State.DONE
+            req.t_done = time.monotonic()
+            self.metrics["capacity_stops"] += 1
+            self.pool.release(slot)
         self.metrics["decode_steps"] += 1
         self.metrics["idle_slot_steps"] += self.pool.n_slots - len(stepping)
         if not stepping:
@@ -368,7 +535,17 @@ class RAGEngine:
             self._decode_active(token_vec, stepping)
 
     def _decode_active(self, token_vec, stepping) -> None:
-        if self.cfg.fused_decode:
+        if isinstance(self.pool, PagedKVCachePool):
+            for slot in stepping:        # allocate/COW each write target
+                self.pool.prepare_append(slot, 1)
+            step_mask = np.zeros(self.pool.n_slots, bool)
+            step_mask[stepping] = True
+            toks, self.pool.cache = self._paged_decode_jit(
+                self.gen.params, self.pool.cache, jnp.asarray(token_vec),
+                self.pool.positions(), jnp.asarray(self.pool.block_tables()),
+                jnp.asarray(step_mask))
+            new_tokens = np.asarray(toks)            # the step's one sync
+        elif self.cfg.fused_decode:
             step_mask = np.zeros(self.pool.n_slots, bool)
             step_mask[stepping] = True
             toks, self.pool.cache = self._fused_decode_jit(
@@ -416,6 +593,27 @@ class RAGEngine:
             self.pool.release(slot)
 
     # ---------------- public API ------------------------------------------
+
+    def tick(self) -> None:
+        """One continuous-batching iteration: admit newly queued requests
+        into free slots, advance chunked prefills by one chunk, dispatch
+        due iterative retrievals, take one decode step.  Admission and
+        eviction (slot release on DONE/capacity) both happen inside every
+        tick, so the decode batch re-forms continuously."""
+        self._admit()
+        self._prefill_tick()
+        self._dispatch_iterative(
+            force=not any(r.state is State.DECODE
+                          for r in self.active.values()))
+        self._decode_step()
+
+    def metrics_snapshot(self) -> dict:
+        """Engine counters merged with the KV pool's page counters
+        (``pages_allocated``/``pages_shared``/... for the paged pool)."""
+        out = dict(self.metrics)
+        out["stage_time_s"] = dict(self.metrics["stage_time_s"])
+        out.update(getattr(self.pool, "metrics", {}))
+        return out
 
     def serve(self, requests: list[Request],
               max_steps: int = 10000) -> list[Request]:

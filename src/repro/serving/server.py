@@ -13,11 +13,11 @@ on the returned :class:`RequestHandle`.
         ...
     server.run_until_idle()                    # or step() under a driver
 
-``step()`` advances the engine by exactly one iteration of the classic
-serve loop (admit -> iterative-retrieval dispatch -> fused decode step),
-so a ``RAGServer`` fed all requests up front is token-for-token identical
-to the legacy closed-batch ``RAGEngine.serve(list)`` -- which is now a
-thin wrapper over this class.
+``step()`` advances the engine by exactly one continuous-batching tick
+(:meth:`RAGEngine.tick`: admit -> chunked-prefill advance -> iterative-
+retrieval dispatch -> fused decode step), so a ``RAGServer`` fed all
+requests up front is token-for-token identical to the legacy closed-batch
+``RAGEngine.serve(list)`` -- which is now a thin wrapper over this class.
 
 Arrival drivers: :func:`poisson_offsets` generates open-loop Poisson
 arrival times, :meth:`RAGServer.replay` replays any offset trace against
@@ -247,11 +247,7 @@ class RAGServer:
         if not (eng.queue or eng.active):
             self._deliver()
             return False
-        eng._admit()
-        eng._dispatch_iterative(
-            force=not any(r.state is State.DECODE
-                          for r in eng.active.values()))
-        eng._decode_step()
+        eng.tick()
         self._deliver()
         return bool(eng.queue or eng.active)
 

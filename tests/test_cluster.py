@@ -311,6 +311,46 @@ def test_cluster_token_parity_with_single_engine(stack):
 
 
 @pytest.mark.slow
+def test_paged_cluster_parity_and_handoff_dedup(stack):
+    """Acceptance: a 1-prefill + 1-decode cluster on the PAGED pool is
+    token-for-token identical to a collocated engine decoding on the
+    DENSE pool (the paged layout and the page-granular handoff are pure
+    optimizations), and with repeated questions the handoff ships fewer
+    bytes than the dense whole-prefix export -- pages the decode pool
+    already caches are referenced, not transferred."""
+    from repro.serving.engine import EngineConfig, RAGEngine
+    from repro.serving.server import RAGServer
+    gen, enc, corpus, make_q = stack
+    kw = dict(decode_slots=2, s_max=96, max_new_tokens=7,
+              iterative_interval=3, retrieval_batch=2)
+    # a popular-question workload: repeats rebuild identical prefixes
+    popular = [make_q(0), make_q(1)]
+    questions = [popular[i % 2] for i in range(6)]
+
+    ref = RAGServer(RAGEngine(gen, enc, corpus,
+                              EngineConfig(paged=False, **kw)))
+    ref_handles = [ref.submit(q.copy()) for q in questions]
+    ref.run_until_idle()
+
+    srv = RAGServer.from_cluster(_cluster(stack, **kw))
+    clu_handles = [srv.submit(q.copy()) for q in questions]
+    srv.run_until_idle()
+
+    assert [h.output for h in ref_handles] == \
+        [h.output for h in clu_handles]
+    assert all(h.state is State.DONE for h in clu_handles)
+    m = srv.cluster.metrics
+    assert m["handoffs"] == len(questions)
+    # page-granular dedup: repeats shipped less than the dense payload
+    assert m["handoff_pages_shared"] > 0
+    assert 0 < m["handoff_bytes"] < m["handoff_bytes_full"]
+    assert m["handoff_pages"] > 0
+    # the prefill engines shared prefix pages across the repeats too
+    assert sum(e.pool.metrics["pages_shared"]
+               for e in srv.cluster.prefill_engines) > 0
+
+
+@pytest.mark.slow
 def test_cluster_spreads_load_across_groups(stack):
     """2 prefill + 2 decode engines: least-loaded dispatch uses both
     prefill engines, decode assignment uses both decode engines, and the

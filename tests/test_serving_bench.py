@@ -114,6 +114,31 @@ def test_compare_results_gates_p99_tail():
                                  tolerance=0.25) == []
 
 
+def test_compare_results_gates_handoff_bytes():
+    """A disaggregated run that starts shipping more KV bytes per handoff
+    (e.g. page dedup silently broken) fails the gate; legacy files
+    without handoff accounting are not gated on it."""
+    bench = _bench_module()
+    prev = {"presets": {}, "optimized": {"baseline": {
+        "handoff": {"bytes": 100, "bytes_full": 200,
+                    "bytes_per_handoff": 100.0}}}}
+
+    ok = {"presets": {}, "optimized": {"baseline": {
+        "handoff": {"bytes": 110, "bytes_full": 200,
+                    "bytes_per_handoff": 110.0}}}}
+    assert bench.compare_results(ok, prev, tolerance=0.25) == []
+
+    fat = {"presets": {}, "optimized": {"baseline": {
+        "handoff": {"bytes": 200, "bytes_full": 200,
+                    "bytes_per_handoff": 200.0}}}}
+    regs = bench.compare_results(fat, prev, tolerance=0.25)
+    assert len(regs) == 1 and "bytes_per_handoff" in regs[0]
+
+    legacy = {"presets": {}, "optimized": {"baseline": {}}}
+    assert bench.compare_results(fat, legacy, tolerance=0.25) == []
+    assert bench.compare_results(legacy, prev, tolerance=0.25) == []
+
+
 def test_compare_cli_exits_nonzero_on_regression(tmp_path):
     """--compare is the slow-tier perf gate: against a fabricated faster
     'previous' run the CLI must exit nonzero (smallest possible bench:

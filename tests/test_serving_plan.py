@@ -54,10 +54,18 @@ def test_from_schema_derives_stage_fields():
 
 def test_from_schema_overrides_win():
     from repro.serving.engine import EngineConfig
+    # test-scale clamps must shrink max_new_tokens alongside s_max: a
+    # prompt budget of s_max - max_new_tokens - 1 <= 0 is rejected
     cfg = EngineConfig.from_schema(case_IV("70B"), rewrite_tokens=3,
-                                   decode_slots=2, s_max=96)
+                                   decode_slots=2, s_max=96,
+                                   max_new_tokens=16)
     assert cfg.rewrite_tokens == 3
     assert cfg.decode_slots == 2 and cfg.s_max == 96
+    assert cfg.max_new_tokens == 16
+    # an override set that leaves no prompt budget raises (the schema's
+    # decode_len of 256 cannot decode into a 96-token cache)
+    with pytest.raises(ValueError, match="prompt budget"):
+        EngineConfig.from_schema(case_IV("70B"), s_max=96)
 
 
 # ---------------------------------------------------------------------------
