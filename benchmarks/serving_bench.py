@@ -103,7 +103,8 @@ def _scale_clamps(cfg):
                                        if cfg.iterative_interval else None))
 
 
-def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int):
+def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int,
+                   attn_impl: str = "auto"):
     """Stage enabling comes from the schema via the registry
     (EngineConfig.from_schema); only deployment/test-scale knobs are set
     here.  Prefill stays monolithic (no ``prefill_chunk``): only the
@@ -113,7 +114,8 @@ def _engine_config(schema, backend: str, *, s_max: int, max_new_tokens: int):
     from repro.serving.engine import EngineConfig
     cfg = EngineConfig.from_schema(
         schema, decode_slots=4, s_max=s_max, retrieval_k=RETRIEVAL_K,
-        max_new_tokens=max_new_tokens, retrieval_backend=backend)
+        max_new_tokens=max_new_tokens, retrieval_backend=backend,
+        attn_impl=attn_impl)
     return _scale_clamps(cfg)
 
 
@@ -130,13 +132,13 @@ def _recall_vs_exact(engine, questions) -> float:
 
 
 def run_preset(name: str, schema, backend: str, corpus, questions,
-               max_new_tokens: int) -> dict:
+               max_new_tokens: int, attn_impl: str = "auto") -> dict:
     from repro.serving.engine import RAGEngine
     from repro.serving.request import Request, State
 
     comps = _components(schema, vocab=128)
     cfg = _engine_config(schema, backend, s_max=128,
-                         max_new_tokens=max_new_tokens)
+                         max_new_tokens=max_new_tokens, attn_impl=attn_impl)
     engine = RAGEngine(comps["generative"], comps["encoder"], corpus, cfg,
                        rewriter=comps.get("rewriter"),
                        reranker=comps.get("reranker"),
@@ -150,8 +152,17 @@ def run_preset(name: str, schema, backend: str, corpus, questions,
     tpots = [(r.latency - r.ttft) / (len(r.output) - 1)
              for r in done if r.ttft is not None and len(r.output) > 1]
     tokens = sum(len(r.output) for r in done)
+    metrics = engine.metrics_snapshot()
     return {
         "backend": backend,
+        # which decode-attention implementation actually ran (the engine
+        # resolves "auto" by backend), plus its per-step decode wall time
+        # -- the number a kernel regression moves even when QPS is
+        # admission-bound, gated by --compare like the p99 tails
+        "attn_impl": engine.attn_impl,
+        "decode_step_s": round(
+            metrics["stage_time_s"].get("decode", 0.0)
+            / max(metrics["decode_steps"], 1), 6),
         "n_requests": len(reqs),
         "n_done": len(done),
         "wall_s": round(wall, 4),
@@ -164,7 +175,7 @@ def run_preset(name: str, schema, backend: str, corpus, questions,
         "xpu_calibration": _xpu_calibration(schema, engine.metrics),
         # engine counters + the paged pool's page accounting
         # (pages_allocated / pages_shared / pages_cow / pages_evicted)
-        "metrics": engine.metrics_snapshot(),
+        "metrics": metrics,
     }
 
 
@@ -291,10 +302,13 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
 
     For every preset x backend present in BOTH files: QPS must not drop
     more than ``tolerance`` (fractional), TPOT must not grow more than
-    ``tolerance``, and the p99 TTFT/TPOT tails must not grow more than
-    ``2 * tolerance`` (doubled: with bench-sized request counts the p99
-    is the max sample, so it gets headroom -- but a change that only
-    hurts the tail still fails).
+    ``tolerance``, and the p99 TTFT/TPOT tails and the per-step decode
+    wall time (``decode_step_s`` = stage_time_s['decode'] / decode steps)
+    must not grow more than ``2 * tolerance`` (doubled: with bench-sized
+    request counts the p99 is the max sample and per-step decode time is
+    jittery on shared CI, so they get headroom -- but a change that only
+    hurts the tail, or a decode-kernel regression hidden behind
+    admission-bound QPS, still fails).
 
     Disaggregated ``optimized`` rows additionally gate the KV handoff:
     shipped bytes per handoff must not grow more than ``tolerance`` vs
@@ -305,7 +319,8 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     gates = (("qps", "min", 1.0),
              ("tpot_s", "max", 1.0),
              ("ttft_p99_s", "max", 2.0),
-             ("tpot_p99_s", "max", 2.0))
+             ("tpot_p99_s", "max", 2.0),
+             ("decode_step_s", "max", 2.0))
     for preset, backends in prev.get("presets", {}).items():
         for backend, old in backends.items():
             new = cur.get("presets", {}).get(preset, {}).get(backend)
@@ -383,6 +398,11 @@ def main(argv=None) -> dict:
     p.add_argument("--presets", default=None,
                    help="comma-separated preset names (default: all)")
     p.add_argument("--backends", default="exact,ivfpq")
+    p.add_argument("--attn-impl", default="auto",
+                   choices=["auto", "ref", "pallas", "splitk"],
+                   help="decode-attention implementation for the preset "
+                        "engines (auto: pallas on TPU, ref elsewhere); "
+                        "the resolved impl is recorded per row")
     p.add_argument("--optimize", action="store_true",
                    help="also run schema -> plan -> RAGServer.from_plan "
                         "with open-loop Poisson traffic per preset")
@@ -441,10 +461,10 @@ def main(argv=None) -> dict:
         for backend in backends:
             t0 = time.perf_counter()
             row = run_preset(name, schema, backend, corpus, questions,
-                             max_new)
+                             max_new, attn_impl=args.attn_impl)
             row["bench_total_s"] = round(time.perf_counter() - t0, 2)
             results["presets"][name][backend] = row
-            print(f"{name}/{backend}: qps={row['qps']} "
+            print(f"{name}/{backend}[{row['attn_impl']}]: qps={row['qps']} "
                   f"ttft={row['ttft_s']}s tpot={row['tpot_s']}s "
                   f"recall@{RETRIEVAL_K}={row['recall_at_k_vs_exact']}",
                   flush=True)

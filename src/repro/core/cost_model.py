@@ -274,3 +274,25 @@ def calibrate_xpu(xpu: XPUSpec, schema, stage_time_s: dict,
             flops_eff=min(max(spec.flops_eff * k, 1e-9), 1.0),
             mem_eff=min(max(spec.mem_eff * k, 1e-9), 1.0))
     return spec
+
+
+def calibrate_xpu_decode(xpu: XPUSpec, decode_bytes_per_s: float) -> XPUSpec:
+    """XPU spec with ``mem_eff`` pinned to a MEASURED decode-attention
+    streaming bandwidth.
+
+    Decode is memory-bound (the paper's premise): its roofline term is
+    ``kv_bytes / eff_mem_bw``, so the achieved fraction of HBM bandwidth
+    while streaming the KV cache IS the decode efficiency.
+    ``decode_bytes_per_s`` comes from a kernel sweep
+    (``benchmarks/kernel_bench.py``: KV bytes actually touched / wall
+    time, best configuration); plans priced with the returned spec
+    predict decode TPOT from the deployed kernel's measured bandwidth
+    instead of the paper's 0.8 constant.  The compute-side ``flops_eff``
+    is left untouched -- pair with :func:`calibrate_xpu` (prefill-anchored)
+    when both sides have measurements.
+    """
+    from dataclasses import replace as _replace
+    if decode_bytes_per_s <= 0:
+        raise ValueError("decode_bytes_per_s must be positive")
+    return _replace(xpu, mem_eff=min(max(decode_bytes_per_s / xpu.mem_bw,
+                                         1e-9), 1.0))

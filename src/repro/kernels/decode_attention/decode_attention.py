@@ -4,8 +4,14 @@ One query token per sequence attends to a long KV cache.  The grid is
 (batch, kv_blocks); the kv dimension is the innermost (sequential on TPU)
 axis, so the kernel carries running (max, sum, accumulator) statistics in
 VMEM scratch across kv blocks and finalizes the output on the last block --
-the KV cache streams through VMEM one (block_k, H, D) tile at a time while
-the (H, D) accumulator stays resident.
+the KV cache streams through VMEM one (block_k, H_kv, D) tile at a time
+while the (H_kv, G, D) accumulator stays resident.
+
+GQA is grouped, not repeated: queries arrive as (H_kv, q_per_kv, D) and all
+``q_per_kv`` query heads of a kv head score against the SAME streamed KV
+tile, so the cache is read (and stored) once per kv head -- the old wrapper
+``jnp.repeat``ed the whole cache to (B, S, H, D) in HBM first, multiplying
+decode's dominant memory traffic by q_per_kv.
 
 ``cache_len`` masks unwritten cache slots (continuous batching: each
 sequence has its own valid length).
@@ -35,29 +41,29 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32) * sm_scale          # (H, D)
-    k = k_ref[0].astype(jnp.float32)                     # (block_k, H, D)
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (H_kv, G, D)
+    k = k_ref[0].astype(jnp.float32)                     # (block_k, H_kv, D)
     v = v_ref[0].astype(jnp.float32)
     cache_len = len_ref[0]
 
-    s = jnp.einsum("hd,khd->hk", q, k)                   # (H, block_k)
+    s = jnp.einsum("hgd,khd->hgk", q, k)                 # (H_kv, G, block_k)
     pos = s_idx * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 1)
+        jnp.int32, s.shape, 2)
     s = jnp.where(pos < cache_len, s, NEG_INF)
 
-    m_prev = m_scr[...]
+    m_prev = m_scr[...]                                  # (H_kv, G)
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    p = jnp.exp(s - m_new[:, None])
+    p = jnp.exp(s - m_new[..., None])
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
-    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.einsum("hk,khd->hd",
-                                                             p, v)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum("hgk,khd->hgd",
+                                                               p, v)
     m_scr[...] = m_new
 
     @pl.when(s_idx == n_blocks - 1)
     def _finalize():
         o_ref[0] = (acc_scr[...] /
-                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(
+                    jnp.maximum(l_scr[...], 1e-30)[..., None]).astype(
                         o_ref.dtype)
 
 
@@ -65,12 +71,13 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, cache_len: jax.Array,
                             block_k: int = 512,
                             interpret: bool = True) -> jax.Array:
-    """q: (B, H, D); caches: (B, S, H, D); cache_len: (B,) int32.
+    """q: (B, H_kv, G, D); caches: (B, S, H_kv, D); cache_len: (B,) int32.
 
-    Returns (B, H, D).  S % block_k == 0 (ops.py pads)."""
-    b, h, d = q.shape
+    Returns (B, H_kv, G, D).  S % block_k == 0 (ops.py pads)."""
+    b, h_kv, g, d = q.shape
     s = k_cache.shape[1]
     assert s % block_k == 0
+    assert k_cache.shape[2] == h_kv
     grid = (b, s // block_k)
     return pl.pallas_call(
         functools.partial(_decode_kernel, block_k=block_k,
@@ -78,16 +85,16 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i, j: (i,)),
-            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, block_k, h, d), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, block_k, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, h_kv, g, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_k, h_kv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_k, h_kv, d), lambda i, j: (i, j, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        out_specs=pl.BlockSpec((1, h_kv, g, d), lambda i, j: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_kv, g, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((h,), jnp.float32),      # running max
-            pltpu.VMEM((h,), jnp.float32),      # running sum
-            pltpu.VMEM((h, d), jnp.float32),    # output accumulator
+            pltpu.VMEM((h_kv, g), jnp.float32),      # running max
+            pltpu.VMEM((h_kv, g), jnp.float32),      # running sum
+            pltpu.VMEM((h_kv, g, d), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
     )(cache_len, q, k_cache, v_cache)

@@ -1,4 +1,9 @@
-"""Jitted wrapper: GQA repeat + cache padding for the decode kernel."""
+"""Jitted wrapper: GQA head grouping + cache padding for the decode kernel.
+
+The KV cache is never expanded: query heads are reshaped to
+(B, H_kv, q_per_kv, D) and the kernel scores each kv head's query group
+against the unexpanded (B, S, H_kv, D) cache tiles.
+"""
 
 from __future__ import annotations
 
@@ -26,16 +31,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     b, h, d = q.shape
     s = k_cache.shape[1]
     h_kv = k_cache.shape[2]
-    if h_kv != h:
-        rep = h // h_kv
-        k_cache = jnp.repeat(k_cache, rep, axis=2)
-        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    qg = q.reshape(b, h_kv, h // h_kv, d)
     bk = min(block_k, s)
     pad = (-s) % bk
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    out = decode_attention_pallas(q, k_cache, v_cache,
+    out = decode_attention_pallas(qg, k_cache, v_cache,
                                   cache_len.astype(jnp.int32), block_k=bk,
                                   interpret=_interpret_default())
+    out = out.reshape(b, h, d)
     return out[:, None] if squeeze else out

@@ -494,12 +494,16 @@ def make_cache(cfg: TransformerConfig, batch: int, s_max: int,
 # logical page j of sequence b to a physical page; position p of sequence b
 # lives at physical row block_tables[b, p // page] * page + p % page.  Page
 # allocation, sharing and refcounts are host-side policy
-# (``repro.serving.kv_cache.PagedKVCachePool``); these kernels only scatter
-# new K/V into physical rows and attend over the gathered logical view
-# (B, M*page, H, D).  When M*page equals the dense s_max, the gathered view
-# has the same shape as a dense cache slice and masked softmax zeroes every
-# stale physical row exactly, so paged and dense decode agree token for
-# token.
+# (``repro.serving.kv_cache.PagedKVCachePool``); these entry points only
+# scatter new K/V into physical rows and hand the POST-SCATTER pool plus the
+# block tables to a block-table-native attention impl
+# (``attn(q, k_pages, v_pages, block_tables, cache_len)``).  The default
+# impl gathers the logical view (B, M*page, H, D) and runs reference masked
+# softmax -- when M*page equals the dense s_max that view has the same shape
+# as a dense cache slice and masked softmax zeroes every stale physical row
+# exactly, so paged and dense decode agree token for token.  The Pallas
+# kernel (``repro.kernels.paged_attention``) honors the same contract
+# without ever materializing the gather.
 
 
 def make_paged_cache(cfg: TransformerConfig, n_pages: int, page_size: int,
@@ -521,6 +525,15 @@ def paged_decode_step(params: dict, cache: dict, token: jax.Array,
     ``write_mask`` False (slots not stepping this tick) target the
     out-of-bounds row ``P*page`` and are dropped, which replaces the
     dense fused path's whole-cache step-mask merge.
+
+    ``attn_impl(q, k_pages, v_pages, block_tables, cache_len)`` is
+    BLOCK-TABLE-NATIVE: it receives the post-scatter page pool
+    (P, page, H_kv, D) and the tables, not a gathered per-sequence view,
+    so a paged kernel can walk the pool directly.  The default impl
+    reproduces the pre-kernel path bit-for-bit: gather the logical
+    (B, M*page, H, D) view, repeat KV heads, reference masked softmax.
+    Non-stepping rows read the same pool bytes either way (their write
+    was dropped), so every impl sees identical inputs under a mask.
     """
     B = token.shape[0]
     _, P, page = cache["k"].shape[:3]
@@ -536,9 +549,12 @@ def paged_decode_step(params: dict, cache: dict, token: jax.Array,
         flat = jnp.where(write_mask, flat, P * page)
     attn = attn_impl
     if attn is None:
-        def attn(q, kc, vc, cache_len):
-            kr = cm.repeat_kv(kc, cfg.q_per_kv)
-            vr = cm.repeat_kv(vc, cfg.q_per_kv)
+        def attn(q, kp, vp, tables, cache_len):
+            # gather each sequence's logical view: (B, M*page, H, D)
+            kg = kp[tables].reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
+            vg = vp[tables].reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
+            kr = cm.repeat_kv(kg, cfg.q_per_kv)
+            vr = cm.repeat_kv(vg, cfg.q_per_kv)
             return cm.decode_attention_ref(q, kr, vr, cache_len)
 
     def layer_fn(x, scanned):
@@ -551,12 +567,9 @@ def paged_decode_step(params: dict, cache: dict, token: jax.Array,
             P * page, cfg.n_kv_heads, cfg.d_head)
         kf = kf.at[flat].set(k_new[:, 0], mode="drop")
         vf = vf.at[flat].set(v_new[:, 0], mode="drop")
-        # gather each sequence's logical view: (B, M, page, H, D)
-        kg = kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_tables]
-        vg = vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)[block_tables]
-        kg = kg.reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
-        vg = vg.reshape(B, M * page, cfg.n_kv_heads, cfg.d_head)
-        out = attn(q, kg, vg, pos + 1)
+        kp = kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)
+        vp = vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head)
+        out = attn(q, kp, vp, block_tables, pos + 1)
         wo = cm.maybe_dequant(lp["wo"], compute_dtype)
         x = x + (out.reshape(B, 1, cfg.n_heads * cfg.d_head)
                  @ wo).astype(x.dtype)
@@ -565,8 +578,7 @@ def paged_decode_step(params: dict, cache: dict, token: jax.Array,
             h, _ = moe_ffn(xn, lp, cfg, compute_dtype)
         else:
             h = dense_ffn(xn, lp, compute_dtype, cfg.ffn_type)
-        return x + h, (kf.reshape(P, page, cfg.n_kv_heads, cfg.d_head),
-                       vf.reshape(P, page, cfg.n_kv_heads, cfg.d_head))
+        return x + h, (kp, vp)
 
     (x), caches = jax.lax.scan(
         layer_fn, x, (params["layers"], cache["k"], cache["v"]))

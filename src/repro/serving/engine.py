@@ -100,6 +100,13 @@ class EngineConfig:
     use_pq_kernel: bool | None = None      # None = Pallas kernel on TPU only
     # decode-step fusion (False keeps the pre-fusion path for parity tests)
     fused_decode: bool = True
+    # decode attention implementation.  "auto" resolves at engine
+    # construction: the Pallas paged kernel on TPU, the reference
+    # gather+softmax path elsewhere.  "pallas" forces the kernel (interpret
+    # mode off-TPU -- CPU CI runs it bit-gated), "splitk" the distributed
+    # flash-decoding attention from repro.distributed.decode_attn.
+    attn_impl: str = "auto"              # "auto" | "ref" | "pallas" | "splitk"
+    attn_num_buffers: int = 2            # DMA staging buffers (2=double, 4=quad)
     # paged KV cache + continuous batching
     paged: bool = True                   # page-table pool (False: dense slots)
     page_size: int = 16                  # tokens per KV page
@@ -121,6 +128,14 @@ class EngineConfig:
             raise ValueError(f"page_size={self.page_size} must be positive")
         if self.iter_query_tokens <= 0:
             raise ValueError("iter_query_tokens must be positive")
+        if self.attn_impl not in ("auto", "ref", "pallas", "splitk"):
+            raise ValueError(
+                f"attn_impl={self.attn_impl!r} must be one of "
+                "'auto', 'ref', 'pallas', 'splitk'")
+        if self.attn_num_buffers < 2:
+            raise ValueError(
+                f"attn_num_buffers={self.attn_num_buffers} must be >= 2 "
+                "(one page in flight while computing another)")
         if not self.fused_decode:
             # the pre-fusion parity path predates paging; it decodes
             # against the dense slot pool
@@ -195,12 +210,18 @@ class RAGEngine:
                         "host_syncs": 0, "decode_host_syncs": 0,
                         "cache_copy_bytes": 0, "capacity_stops": 0,
                         "stage_time_s": {}}
-        self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg))
+        # resolved decode-attention implementation ("auto" picks by backend)
+        self.attn_impl = cfg.attn_impl if cfg.attn_impl != "auto" else (
+            "pallas" if jax.default_backend() == "tpu" else "ref")
+        paged_attn, dense_attn = self._make_attn_impls()
+        self._decode_jit = jax.jit(partial(tr.decode_step, cfg=self.gen.cfg,
+                                           attn_impl=dense_attn))
         self._fused_decode_jit = jax.jit(
-            partial(self._fused_decode, cfg=self.gen.cfg),
+            partial(self._fused_decode, cfg=self.gen.cfg, attn=dense_attn),
             donate_argnums=(1,))
         self._paged_decode_jit = jax.jit(
-            partial(self._paged_fused_decode, cfg=self.gen.cfg),
+            partial(self._paged_fused_decode, cfg=self.gen.cfg,
+                    attn=paged_attn),
             donate_argnums=(1,))
         self._encode_jit = jax.jit(partial(tr.encode, cfg=self.enc.cfg))
         self._prefill_jit = {}                   # bucket -> jitted prefill
@@ -215,6 +236,49 @@ class RAGEngine:
         self.executors = REGISTRY.engine_executors(self)
 
     # ---------------- shared primitives -----------------------------------
+
+    def _make_attn_impls(self):
+        """Build the (paged, dense) decode-attention callables for the
+        resolved ``attn_impl``.
+
+        The callables are closed over by the jitted decode programs via
+        ``functools.partial`` at construction -- jit never sees them as
+        arguments, so swapping implementations costs nothing per step.
+        ``(None, None)`` keeps the transformer entry points' built-in
+        reference paths (gather + masked softmax), which is what every
+        engine computed before this knob existed.
+        """
+        if self.attn_impl == "ref":
+            return None, None
+        if self.attn_impl == "pallas":
+            from repro.kernels.decode_attention.ops import decode_attention
+            from repro.kernels.paged_attention.ops import (
+                paged_decode_attention)
+            nb = self.cfg.attn_num_buffers
+
+            def paged_attn(q, kp, vp, tables, cache_len):
+                return paged_decode_attention(q, kp, vp, tables, cache_len,
+                                              num_buffers=nb)
+
+            return paged_attn, decode_attention
+        # splitk: flash-decoding sharded over the host mesh's model axis
+        # (trivially 1 shard on a single device; the point is wiring the
+        # distributed path into the engine with engine-identical tokens)
+        from repro.distributed.decode_attn import make_distributed_decode_attn
+        from repro.launch.mesh import make_host_mesh
+        dense_attn = make_distributed_decode_attn(make_host_mesh(),
+                                                  self.gen.cfg.q_per_kv)
+
+        def paged_attn(q, kp, vp, tables, cache_len):
+            # split-K shards the sequence axis of a dense view, so this
+            # adapter gathers it; only the "pallas" impl is gather-free
+            b, m = tables.shape
+            _, page, h_kv, d = kp.shape
+            kg = kp[tables].reshape(b, m * page, h_kv, d)
+            vg = vp[tables].reshape(b, m * page, h_kv, d)
+            return dense_attn(q, kg, vg, cache_len)
+
+        return paged_attn, dense_attn
 
     def has_executor(self, name: str) -> bool:
         return any(ex.name == name for ex in self.executors)
@@ -481,14 +545,14 @@ class RAGEngine:
 
     @staticmethod
     def _fused_decode(params, cache, token_vec, positions, step_mask, *,
-                      cfg):
+                      cfg, attn=None):
         """One fused decode step: forward + argmax + active-slot cache
         merge in a single XLA program.  ``step_mask`` (B,) bool selects the
         slots that actually decoded; other slots keep their old cache rows
         (the step wrote a garbage token at their current position).  The
         cache argument is donated, so the merge is an in-place update."""
         logits, new_cache = tr.decode_step(params, cache, token_vec,
-                                           positions, cfg)
+                                           positions, cfg, attn_impl=attn)
         tokens = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
         mask = step_mask[None, :, None, None, None]     # (L, B, S, H, D)
         merged = jax.tree_util.tree_map(
@@ -497,14 +561,17 @@ class RAGEngine:
 
     @staticmethod
     def _paged_fused_decode(params, cache, token_vec, positions,
-                            block_tables, step_mask, *, cfg):
+                            block_tables, step_mask, *, cfg, attn=None):
         """Fused decode against the paged pool: forward + argmax in one
         donated XLA program.  No step-mask cache merge is needed -- slots
         that are not stepping simply scatter their K/V write out of
-        bounds (dropped), so the page pool is never touched for them."""
+        bounds (dropped), so the page pool is never touched for them;
+        they read the same post-scatter pool bytes whichever ``attn``
+        implementation runs, which is why the attention kernel needs no
+        write-mask handling of its own."""
         logits, cache = tr.paged_decode_step(
             params, cache, token_vec, positions, block_tables, cfg,
-            write_mask=step_mask)
+            attn_impl=attn, write_mask=step_mask)
         tokens = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
         return tokens.astype(jnp.int32), cache
 
@@ -612,6 +679,7 @@ class RAGEngine:
         (``pages_allocated``/``pages_shared``/... for the paged pool)."""
         out = dict(self.metrics)
         out["stage_time_s"] = dict(self.metrics["stage_time_s"])
+        out["attn_impl"] = self.attn_impl
         out.update(getattr(self.pool, "metrics", {}))
         return out
 

@@ -1,0 +1,97 @@
+"""The kernel microbenchmark sweep is CI-covered the same way the serving
+bench is: ``--smoke`` must emit a well-formed BENCH_kernels.json (ragged
+paged-attention bandwidth, pq_scan bandwidth, decode calibration), and
+``compare_results`` must catch fabricated bandwidth regressions while
+skipping rows whose sweep axes changed."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _bench_module():
+    sys.path.insert(0, str(REPO / "benchmarks"))
+    try:
+        import kernel_bench
+    finally:
+        sys.path.pop(0)
+    return kernel_bench
+
+
+@pytest.mark.slow
+def test_kernel_bench_smoke(tmp_path):
+    out = tmp_path / "BENCH_kernels.json"
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "kernel_bench.py"),
+         "--smoke", "--reps", "1", "--out", str(out),
+         "--compare", str(out)],           # gate vs the file it just wrote
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+
+    data = json.loads(out.read_text())
+    assert data["meta"]["smoke"] is True
+    assert data["meta"]["best_decode_bytes_per_s"] > 0
+    cal = data["meta"]["decode_calibration"]
+    assert 0 < cal["mem_eff_after"] <= 1.0
+    assert cal["predicted_tpot_after_s"] > 0
+    rows = data["rows"]
+    paged = [r for r in rows if r["kernel"] == "paged_attention"]
+    # smoke: one page size x double+quad buffering
+    assert sorted(r["num_buffers"] for r in paged) == [2, 4]
+    for r in paged:
+        assert r["wall_us"] > 0 and r["bytes_per_s"] > 0
+        # the ragged batch has an empty row: fewer pages than a dense read
+        dense_pages = r["batch"] * (max(r["lengths"]) // r["page_size"])
+        assert r["kv_bytes"] < 2 * dense_pages * r["page_size"] * 1000
+        assert r["xpu_calibration"]["mem_eff_after"] > 0
+    pq = [r for r in rows if r["kernel"] == "pq_scan"]
+    assert len(pq) == 1 and pq[0]["bytes_per_s"] > 0
+    assert "no regression" in res.stdout
+
+
+def test_compare_results_detects_bandwidth_regression():
+    bench = _bench_module()
+    prev = {"rows": [
+        {"kernel": "paged_attention", "page_size": 16, "num_buffers": 2,
+         "bytes_per_s": 1000.0},
+        {"kernel": "pq_scan", "block_n": 512, "bytes_per_s": 500.0}]}
+
+    ok = {"rows": [
+        {"kernel": "paged_attention", "page_size": 16, "num_buffers": 2,
+         "bytes_per_s": 600.0},            # -40% < 2x0.25 drop: passes
+        {"kernel": "pq_scan", "block_n": 512, "bytes_per_s": 500.0}]}
+    assert bench.compare_results(ok, prev, tolerance=0.25) == []
+
+    slow = {"rows": [
+        {"kernel": "paged_attention", "page_size": 16, "num_buffers": 2,
+         "bytes_per_s": 300.0},            # -70%: fails the doubled gate
+        {"kernel": "pq_scan", "block_n": 512, "bytes_per_s": 500.0}]}
+    regs = bench.compare_results(slow, prev, tolerance=0.25)
+    assert len(regs) == 1
+    assert "paged_attention" in regs[0] and "page_size=16" in regs[0]
+
+
+def test_compare_results_skips_unmatched_and_legacy_rows():
+    """Rows are matched on the full tuning key: a sweep whose axes
+    changed (new page size, missing kernel) is not a regression, and
+    rows without a bandwidth figure are never gated."""
+    bench = _bench_module()
+    prev = {"rows": [
+        {"kernel": "paged_attention", "page_size": 8, "num_buffers": 2,
+         "bytes_per_s": 1000.0},
+        {"kernel": "pq_scan", "block_n": 256, "bytes_per_s": 0},
+        {"kernel": "pq_scan", "block_n": 1024}]}
+    cur = {"rows": [
+        {"kernel": "paged_attention", "page_size": 16, "num_buffers": 2,
+         "bytes_per_s": 1.0},              # different page size: unmatched
+        {"kernel": "pq_scan", "block_n": 256, "bytes_per_s": 1.0},
+        {"kernel": "pq_scan", "block_n": 1024, "bytes_per_s": 1.0}]}
+    assert bench.compare_results(cur, prev, tolerance=0.25) == []

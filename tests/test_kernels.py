@@ -127,6 +127,21 @@ def test_decode_attention_length_masking():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
+def test_decode_attention_never_materializes_repeated_kv():
+    """GQA regression: the wrapper used to ``jnp.repeat`` the KV cache to
+    full query-head width before the kernel.  Query heads are now grouped
+    (B, H_kv, q_per_kv, D) instead, so no intermediate of the repeated
+    cache shape (B, S, H, D) may appear anywhere in the program."""
+    b, s, h, hkv, d = 2, 64, 8, 2, 16
+    q = jnp.zeros((b, h, d))
+    kc = jnp.zeros((b, s, hkv, d))
+    lens = jnp.zeros((b,), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: decode_attention(*a, block_k=32))(q, kc, kc, lens)
+    repeated = f"{b},{s},{h},{d}"                  # (B, S, H_full, D)
+    assert repeated not in str(jaxpr).replace(" ", "")
+
+
 def test_pq_scan_at_ivfpq_search_shapes():
     """Kernel-vs-ref equivalence at the exact flattened (Q*P, LL, S) shapes
     ``ivf_pq.search`` emits when routing through the kernel."""

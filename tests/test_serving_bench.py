@@ -114,6 +114,28 @@ def test_compare_results_gates_p99_tail():
                                  tolerance=0.25) == []
 
 
+def test_compare_results_gates_decode_step_time():
+    """A kernel change that doubles per-step decode wall time fails the
+    gate (2x tolerance, like the p99 tails); legacy files without the
+    field are not gated on it."""
+    bench = _bench_module()
+    prev = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05, "decode_step_s": 0.02}}}}
+
+    ok = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05, "decode_step_s": 0.028}}}}
+    assert bench.compare_results(ok, prev, tolerance=0.25) == []
+
+    slow = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05, "decode_step_s": 0.05}}}}
+    regs = bench.compare_results(slow, prev, tolerance=0.25)
+    assert len(regs) == 1 and "decode_step_s" in regs[0]
+
+    legacy_prev = {"presets": {"baseline": {"exact": {
+        "qps": 4.0, "tpot_s": 0.05}}}}
+    assert bench.compare_results(slow, legacy_prev, tolerance=0.25) == []
+
+
 def test_compare_results_gates_handoff_bytes():
     """A disaggregated run that starts shipping more KV bytes per handoff
     (e.g. page dedup silently broken) fails the gate; legacy files
