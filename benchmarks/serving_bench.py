@@ -33,9 +33,15 @@ Modes:
                            #   KV handoff) and drive Poisson traffic AND the
                            #   checked-in bursty arrival trace through it;
                            #   reports p50/p99 TTFT/TPOT per engine group
+    ... --faults           # drive a 2+2 disaggregated cluster through the
+                           #   fixed "combined" chaos schedule (crashes,
+                           #   handoff corruption, retrieval timeouts) and
+                           #   report goodput, recovery counters and the
+                           #   termination invariant under faults
     ... --compare PREV.json [--tolerance 0.25]
-                           # nonzero exit on QPS / TPOT / p99-tail
-                           # regression vs a previous BENCH_serving.json
+                           # nonzero exit on QPS / TPOT / p99-tail /
+                           # goodput-under-faults regression vs a previous
+                           # BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -296,6 +302,74 @@ def run_optimized(name: str, schema, corpus, questions, max_new_tokens: int,
     return row
 
 
+def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
+    """Serve a fixed request set on a 2-prefill + 2-decode cluster while
+    the deterministic "combined" chaos schedule fires (transient stage
+    error, handoff corruption, retrieval timeouts, a decode-engine crash)
+    and report what the robustness layer delivered: goodput (fraction
+    DONE), recovery counters, p99 TTFT including recovery delays, and the
+    termination invariant (every request terminal, no slot/page leaks).
+    The schedule and seed are pinned, so the row is comparable across
+    runs and ``--compare`` can gate goodput-under-faults."""
+    from repro.configs.rag_pipelines import PRESETS
+    from repro.serving.cluster import RAGCluster, percentiles
+    from repro.serving.engine import RAGEngine
+    from repro.serving.faults import (CHAOS_SCHEDULES, FaultInjector,
+                                      FaultPlan)
+    from repro.serving.request import TERMINAL_STATES, State
+    from repro.serving.server import RAGServer
+
+    schema = PRESETS["baseline"]()
+    comps = _components(schema, vocab=128)
+    cfg = _engine_config(schema, "exact", s_max=128,
+                         max_new_tokens=max_new_tokens)
+    first = RAGEngine(comps["generative"], comps["encoder"], corpus,
+                      replace(cfg, decode_slots=1))
+    shared = dict(db_vectors=first.db_vectors, backend=first.backend)
+    prefill = [first, RAGEngine(comps["generative"], comps["encoder"],
+                                corpus, replace(cfg, decode_slots=1),
+                                **shared)]
+    decode = [RAGEngine(comps["generative"], comps["encoder"], corpus, cfg,
+                        **shared) for _ in range(2)]
+    injector = FaultInjector(
+        FaultPlan.from_schedule(CHAOS_SCHEDULES["combined"], seed=0))
+    cluster = RAGCluster(prefill, decode, injector=injector,
+                         retry_backoff=0.005)
+    server = RAGServer(cluster)
+    t0 = time.perf_counter()
+    handles = [server.submit(q.copy()) for q in questions]
+    steps = server.run_until_idle(max_steps=50_000)
+    wall = time.perf_counter() - t0
+    reqs = [h.request for h in handles]
+    done = [r for r in reqs if r.state is State.DONE]
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    no_leaks = (not cluster.queue and not cluster.handoff
+                and not cluster.retrying
+                and all(not e.active and not e.pending_retrievals
+                        for e in cluster.decode_engines))
+    sched = cluster.group_summary()["scheduler"]
+    return {
+        "schedule": "combined",
+        "n_requests": len(reqs),
+        "n_done": len(done),
+        # the headline number: fraction of submitted requests that still
+        # completed despite the fault schedule (gated by --compare)
+        "goodput": round(len(done) / max(len(reqs), 1), 4),
+        "all_terminal": all(r.state in TERMINAL_STATES for r in reqs),
+        "no_leaks": no_leaks,
+        "steps": steps,
+        "wall_s": round(wall, 4),
+        "ttft_p99_s": percentiles(ttfts)["p99"],
+        "faults_fired": len(injector.log),
+        "recovery": {k: sched[k] for k in (
+            "engine_failures", "requests_retried", "retries_exhausted",
+            "handoff_corrupt", "handoff_dropped", "stage_errors",
+            "brownout_shed", "degraded_answers", "retrieval_fallbacks",
+            "retrieval_no_context")},
+        "health": cluster.group_summary()["health"],
+    }
+
+
 def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     """QPS/TPOT/p99-tail regressions of ``cur`` vs a previous
     BENCH_serving.json.
@@ -313,8 +387,13 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     Disaggregated ``optimized`` rows additionally gate the KV handoff:
     shipped bytes per handoff must not grow more than ``tolerance`` vs
     the previous run (skipped when either file predates the page-granular
-    handoff accounting).  Returns human-readable regression strings
-    (empty == pass)."""
+    handoff accounting).
+
+    ``faults`` rows (``--faults``) gate robustness: the termination
+    invariant (every request terminal, no leaked slots/pages) must hold
+    in the CURRENT run unconditionally, and goodput under the pinned
+    chaos schedule must not drop more than ``tolerance`` vs the previous
+    run.  Returns human-readable regression strings (empty == pass)."""
     regressions = []
     gates = (("qps", "min", 1.0),
              ("tpot_s", "max", 1.0),
@@ -359,6 +438,22 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
             regressions.append(
                 f"{preset}/optimized: handoff {key} {new_h[key]} > "
                 f"{bound:.1f} (prev {old_h[key]}, tol {tolerance})")
+    new_f = cur.get("faults")
+    if new_f is not None:
+        if not new_f.get("all_terminal", True):
+            regressions.append("faults: termination invariant violated "
+                               "(non-terminal request after drain)")
+        if not new_f.get("no_leaks", True):
+            regressions.append("faults: slot/page leak after drain")
+        old_f = prev.get("faults")
+        if (old_f and old_f.get("goodput")
+                and new_f.get("goodput") is not None
+                and old_f.get("schedule") == new_f.get("schedule")):
+            bound = old_f["goodput"] * (1.0 - tolerance)
+            if new_f["goodput"] < bound:
+                regressions.append(
+                    f"faults: goodput {new_f['goodput']} < {bound:.4f} "
+                    f"(prev {old_f['goodput']}, tol {tolerance})")
     return regressions
 
 
@@ -416,6 +511,11 @@ def main(argv=None) -> dict:
                    help="JSONL arrival trace replayed through the cluster "
                         "in --topology disagg (default: the checked-in "
                         "bursty RAGPulse-style trace)")
+    p.add_argument("--faults", action="store_true",
+                   help="also drive a 2+2 disaggregated cluster through "
+                        "the pinned 'combined' chaos schedule and report "
+                        "goodput + recovery counters + the termination "
+                        "invariant under faults")
     p.add_argument("--compare", default=None, metavar="PREV.json",
                    help="exit nonzero on QPS/TPOT regression vs a previous "
                         "BENCH_serving.json")
@@ -491,6 +591,18 @@ def main(argv=None) -> dict:
                       f"{g['prefill']['ttft_s']['p99']}s; decode group "
                       f"tpot p50/p99 = {g['decode']['tpot_s']['p50']}/"
                       f"{g['decode']['tpot_s']['p99']}s", flush=True)
+
+    if args.faults:
+        row = run_faulted(corpus, questions, max_new)
+        results["faults"] = row
+        rec = row["recovery"]
+        print(f"faults[{row['schedule']}]: goodput={row['goodput']} "
+              f"({row['n_done']}/{row['n_requests']} done), "
+              f"all_terminal={row['all_terminal']} "
+              f"no_leaks={row['no_leaks']}, fired={row['faults_fired']}, "
+              f"retried={rec['requests_retried']} "
+              f"failures={rec['engine_failures']} "
+              f"degraded={rec['degraded_answers']}", flush=True)
 
     Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")

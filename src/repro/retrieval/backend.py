@@ -129,6 +129,87 @@ class IVFPQBackend:
         return float(coarse + self.nprobe * list_len * idx.n_subq)
 
 
+class RetrievalError(RuntimeError):
+    """A retrieval backend failed to serve a query batch."""
+
+
+class RetrievalTimeout(RetrievalError):
+    """A retrieval backend exceeded its (logical) deadline."""
+
+
+class FallbackBackend:
+    """Graceful-degradation chain over retrieval backends.
+
+    ``search`` tries each backend in order and returns the first success;
+    a :class:`RetrievalError` (or injected fault) falls through to the
+    next one -- the degradation ladder is *primary (e.g. IVF-PQ) -> exact
+    scan -> no-context* (every level failed: an all ``-1`` id batch with
+    ``-inf`` scores, which the engine serves as a retrieval-free answer
+    flagged ``degraded``).  With no faults the primary never raises and
+    the chain is bit-transparent.
+
+    ``metrics``: ``fallbacks`` (queries served by a non-primary level),
+    ``no_context`` (queries served with no retrieval at all).  After each
+    ``search``, ``last_level`` is the chain index that served it (``-1``
+    = no-context) -- the engine reads it to flag degraded requests.
+
+    ``injector`` (optional, settable post-construction) is a
+    :class:`repro.serving.faults.FaultInjector`; the chain consults the
+    ``retrieval_timeout`` / ``retrieval_error`` points before the primary
+    and ``retrieval_blackout`` before every level, so CI can exercise the
+    whole ladder deterministically with real backends underneath."""
+
+    name = "fallback"
+
+    def __init__(self, chain: list[RetrievalBackend], injector=None):
+        if not chain:
+            raise ValueError("fallback chain needs at least one backend")
+        self.chain = list(chain)
+        self.injector = injector
+        self.metrics = {"fallbacks": 0, "no_context": 0}
+        self.last_level: int = 0
+
+    def _injected(self) -> str | None:
+        """One deterministic fault decision per search call: blackout
+        fails every level, timeout/error fail only the primary."""
+        inj = self.injector
+        if inj is None:
+            return None
+        if inj.fire("retrieval_blackout") is not None:
+            return "blackout"
+        if inj.fire("retrieval_timeout") is not None:
+            return "timeout"
+        if inj.fire("retrieval_error") is not None:
+            return "error"
+        return None
+
+    def search(self, queries: jax.Array, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+        fault = self._injected()
+        if fault != "blackout":
+            for level, backend in enumerate(self.chain):
+                if level == 0 and fault in ("timeout", "error"):
+                    continue                   # primary down this call
+                try:
+                    scores, ids = backend.search(queries, k)
+                except RetrievalError:
+                    continue
+                if level > 0:
+                    self.metrics["fallbacks"] += 1
+                self.last_level = level
+                return scores, ids
+        # every level failed: the last-resort no-context answer
+        self.metrics["no_context"] += 1
+        self.last_level = -1
+        n = int(np.asarray(queries).shape[0])
+        return (np.full((n, k), -np.inf, np.float32),
+                np.full((n, k), -1, np.int64))
+
+    @property
+    def bytes_per_query(self) -> float:
+        return self.chain[0].bytes_per_query
+
+
 BACKENDS = {"exact": ExactBackend, "ivfpq": IVFPQBackend}
 
 

@@ -16,7 +16,7 @@ single-engine ``RAGServer``).  With the default paged pools the handoff is
 page-granular: the payload carries per-page chain keys, the importing pool
 references pages its prefix cache already holds instead of writing them,
 and only the rest counts as shipped -- ``handoff_bytes`` (shipped, counted
-at decode-slot assignment) vs ``handoff_bytes_full`` (what a dense
+only after a confirmed import) vs ``handoff_bytes_full`` (what a dense
 whole-prefix export would move), plus ``handoff_pages`` /
 ``handoff_pages_shared`` page counts.
 
@@ -26,19 +26,38 @@ Scheduling, per :meth:`RAGCluster.step`:
   already unmeetable under the plan-predicted TTFT is shed immediately
   (``State.EXPIRED`` before any compute).
 * **Least-loaded prefill dispatch**: each step hands at most one queued
-  request to each prefill engine, least cumulative prompt tokens first.
+  request to each *healthy* prefill engine, least cumulative prompt
+  tokens first.
 * **Deadline-aware decode assignment**: handoffs wait in an
   earliest-deadline-first queue; free decode slots go to the most urgent
-  request, on the decode engine with the most free slots.  A request whose
-  deadline passes while waiting here expires *between* the groups
-  (``PREFILL -> HANDOFF -> EXPIRED``) -- it was prefilled, never decoded.
+  request, on the healthy decode engine with the most free slots.  A
+  request whose deadline passes while waiting here expires *between* the
+  groups (``PREFILL -> HANDOFF -> EXPIRED``).
+
+Fault tolerance (``repro.serving.faults``): every engine carries a health
+state (HEALTHY / DEGRADED / DEAD) and each step opens with a health sweep.
+A dead prefill engine's mid-prefill request re-dispatches to a healthy
+engine; a dead decode engine's in-slot requests re-enter the pipeline via
+re-prefill, both under a bounded retry budget with exponential backoff
+(``Request.retries`` / ``t_retry``, ``State.RETRYING``).  Handoff payloads
+carry a CRC32 checksum computed at export and verified before import, so a
+corrupt (or dropped) payload is rejected and retried instead of decoded.
+Graceful degradation: the engines' retrieval fallback chain answers
+through exact scan or no-context when the primary backend fails, and a
+brownout policy sheds the lowest-urgency queued requests when healthy
+decode capacity falls below the offered load.  The invariant the whole
+layer enforces: **every submitted request reaches exactly one terminal
+state (DONE / EXPIRED / FAILED) under any fault schedule**, with greedy
+decode making a recovered request's tokens bit-identical to an unfaulted
+run (retry parity).
 
 Requests are driven through the same open-loop front-end as the single
 engine: ``RAGServer(cluster)`` (or ``RAGServer.from_plan(...,
 topology="disagg")``) gives submission, streaming, deadlines and trace
 replay on top of this class.  Tail latency is first-class:
 :meth:`group_summary` reports p50/p95/p99 TTFT per prefill engine and
-p50/p95/p99 TPOT per decode engine, plus handoff traffic and shed counts.
+p50/p95/p99 TPOT per decode engine, plus handoff traffic, shed counts,
+per-engine health and the fault-layer counters.
 """
 
 from __future__ import annotations
@@ -50,7 +69,9 @@ import numpy as np
 
 from repro.core.stage_registry import REGISTRY
 from repro.serving.engine import RAGEngine
-from repro.serving.kv_cache import payload_nbytes
+from repro.serving.faults import (EngineCrash, FaultInjector,
+                                  TransientStageError)
+from repro.serving.kv_cache import payload_checksum, payload_nbytes
 from repro.serving.request import Request, State
 
 
@@ -65,33 +86,65 @@ def percentiles(values, digits: int = 5) -> dict:
 
 class RAGCluster:
     """A ServingPlan's placement, instantiated: prefill engines + decode
-    engines + the KV handoff and scheduler between them."""
+    engines + the KV handoff, scheduler and fault-recovery layer between
+    them."""
 
     def __init__(self, prefill_engines: list[RAGEngine],
                  decode_engines: list[RAGEngine], *,
-                 predicted_ttft: float | None = None):
+                 predicted_ttft: float | None = None,
+                 injector: FaultInjector | None = None,
+                 max_retries: int = 3, retry_backoff: float = 0.02,
+                 brownout_headroom: float | None = 8.0):
+        """``max_retries`` bounds fault recoveries per request (then
+        FAILED); ``retry_backoff`` is the base of the exponential backoff
+        (``backoff * 2**retries`` seconds).  ``brownout_headroom``: once
+        any engine is dead, queued requests beyond ``healthy decode slots
+        * headroom`` are shed lowest-urgency-first (None disables)."""
         if not prefill_engines or not decode_engines:
             raise ValueError("need at least one engine per group")
         self.prefill_engines = list(prefill_engines)
         self.decode_engines = list(decode_engines)
         self.predicted_ttft = predicted_ttft
+        self.injector = injector
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.brownout_headroom = brownout_headroom
         self.queue: list[Request] = []        # cluster admission queue
-        self.handoff: list[tuple] = []        # (req, kv_prefix, length, seq)
+        # (req, kv_prefix, length, seq, checksum)
+        self.handoff: list[tuple] = []
+        self.retrying: list[Request] = []     # fault-recovery backoff pool
         self._seq = 0                         # FIFO tiebreak for EDF
         self._prefill_load = [0] * len(self.prefill_engines)
         self.requests: list[Request] = []
-        # rid -> engine index within its group
+        # rid -> engine index of the request's LATEST pass through the
+        # group (deliberately overwritten on retry: the group summary
+        # attributes the request to the engine that actually served it);
+        # *_history keeps every pass for per-engine failure accounting
         self.prefill_of: dict[int, int] = {}
         self.decode_of: dict[int, int] = {}
+        self.prefill_history: dict[int, list[int]] = {}
+        self.decode_history: dict[int, list[int]] = {}
+        self._dead_seen: set = set()          # (group, idx) counted once
         self.metrics = {"shed_requests": 0, "expired_queued": 0,
-                        "expired_in_handoff": 0, "handoffs": 0,
-                        # shipped at decode-slot assignment (import time):
-                        # pages the destination pool already cached are
-                        # referenced, not transferred
+                        "expired_in_handoff": 0, "expired_retrying": 0,
+                        "handoffs": 0,
+                        # shipped at decode-slot assignment, counted only
+                        # after the import succeeded; pages the
+                        # destination pool already cached are referenced,
+                        # not transferred
                         "handoff_bytes": 0, "handoff_pages": 0,
                         "handoff_pages_shared": 0,
                         # what a dense whole-prefix export would have moved
-                        "handoff_bytes_full": 0}
+                        "handoff_bytes_full": 0,
+                        # fault layer
+                        "engine_failures": 0, "requests_retried": 0,
+                        "retries_exhausted": 0, "handoff_corrupt": 0,
+                        "handoff_dropped": 0, "stage_errors": 0,
+                        "brownout_shed": 0, "failed_no_capacity": 0,
+                        "aborted": 0}
+        if injector is not None:
+            for eng in self.prefill_engines + self.decode_engines:
+                eng.set_injector(injector)
 
     # ---------------- construction -----------------------------------------
 
@@ -99,6 +152,9 @@ class RAGCluster:
     def from_plan(cls, plan, generative, encoder, corpus_tokens, *,
                   rewriter=None, reranker=None, safety=None,
                   n_prefill: int | None = None, n_decode: int | None = None,
+                  injector: FaultInjector | None = None,
+                  max_retries: int = 3, retry_backoff: float = 0.02,
+                  brownout_headroom: float | None = 8.0,
                   **config_overrides) -> "RAGCluster":
         """Instantiate a ServingPlan's placement as engine groups.
 
@@ -126,7 +182,10 @@ class RAGCluster:
         decode = [RAGEngine(generative, encoder, corpus_tokens, cfg,
                             **shared) for _ in range(n_d)]
         return cls(prefill, decode,
-                   predicted_ttft=plan.predicted.get("ttft"))
+                   predicted_ttft=plan.predicted.get("ttft"),
+                   injector=injector, max_retries=max_retries,
+                   retry_backoff=retry_backoff,
+                   brownout_headroom=brownout_headroom)
 
     @property
     def cfg(self):
@@ -148,12 +207,156 @@ class RAGCluster:
             return
         self.queue.append(req)
 
+    # ---------------- fault detection / recovery ---------------------------
+
+    def _note_dead(self, group: str, idx: int) -> None:
+        if (group, idx) not in self._dead_seen:
+            self._dead_seen.add((group, idx))
+            self.metrics["engine_failures"] += 1
+
+    def _schedule_retry(self, req: Request, reason: str,
+                        now: float | None = None) -> None:
+        """Recover one in-flight request: back into the pipeline via
+        re-prefill after an exponential backoff, unless its deadline
+        passed or its retry budget is spent (then EXPIRED / FAILED --
+        still exactly one terminal state)."""
+        if req.done:
+            return
+        now = time.monotonic() if now is None else now
+        if req.deadline is not None and now > req.deadline:
+            req.state = State.EXPIRED
+            req.t_done = now
+            self.metrics["expired_retrying"] += 1
+            return
+        if req.retries >= self.max_retries:
+            req.state = State.FAILED
+            req.fail_reason = f"retry budget exhausted ({reason})"
+            req.t_done = now
+            self.metrics["retries_exhausted"] += 1
+            return
+        req.reset_for_retry(now, self.retry_backoff * (2 ** req.retries))
+        req.fail_reason = None
+        self.metrics["requests_retried"] += 1
+        self.retrying.append(req)
+
+    def _requeue_retries(self, now: float) -> None:
+        """Move retries whose backoff elapsed back into the admission
+        queue (they re-run the full pipeline from the top)."""
+        due = [r for r in self.retrying if now >= r.t_retry]
+        if not due:
+            return
+        self.retrying = [r for r in self.retrying if now < r.t_retry]
+        for req in due:
+            req.state = State.QUEUED
+            self.queue.append(req)
+
+    def _drain_dead_decode(self, idx: int, now: float) -> None:
+        """Recover every request holding state on a dead decode engine:
+        slots are released (page refcounts return to idle -- the
+        bookkeeping is host-side and survives the simulated crash) and
+        the requests re-enter the pipeline via re-prefill."""
+        eng = self.decode_engines[idx]
+        self._note_dead("decode", idx)
+        for slot, req in list(eng.active.items()):
+            eng.active.pop(slot)
+            eng.prefilling.pop(slot, None)
+            eng.pool.release(slot)
+            self._schedule_retry(req, f"decode engine {idx} died", now)
+        eng.pending_retrievals.clear()
+
+    def _health_sweep(self, now: float) -> None:
+        """Step-phase health check: drain requests stranded on dead
+        decode engines, and fail fast when a whole group is gone (no
+        healthy engine can ever serve them -- parking the requests
+        forever would break the one-terminal-state invariant)."""
+        for idx, eng in enumerate(self.decode_engines):
+            if not eng.healthy:
+                if eng.active or eng.pending_retrievals:
+                    self._drain_dead_decode(idx, now)
+                else:
+                    self._note_dead("decode", idx)
+        for idx, eng in enumerate(self.prefill_engines):
+            if not eng.healthy:
+                self._note_dead("prefill", idx)
+        no_prefill = not any(e.healthy for e in self.prefill_engines)
+        no_decode = not any(e.healthy for e in self.decode_engines)
+        if no_prefill or no_decode:
+            group = "prefill" if no_prefill else "decode"
+            doomed = self.queue + self.retrying
+            self.queue, self.retrying = [], []
+            if no_decode:
+                doomed += [item[0] for item in self.handoff]
+                self.handoff = []
+            for req in doomed:
+                if req.done:
+                    continue
+                req.state = State.FAILED
+                req.fail_reason = f"no healthy {group} engines"
+                req.t_done = now
+                self.metrics["failed_no_capacity"] += 1
+
+    def _brownout(self, now: float) -> None:
+        """Graceful degradation under lost capacity: once any engine is
+        dead, queued requests beyond ``healthy decode slots * headroom``
+        are shed lowest-urgency-first (no deadline sheds before latest
+        deadline) so the survivors' tail SLOs stay defensible instead of
+        everything timing out together."""
+        if self.brownout_headroom is None:
+            return
+        engines = self.prefill_engines + self.decode_engines
+        if all(e.healthy for e in engines):
+            return
+        cap = sum(e.cfg.decode_slots
+                  for e in self.decode_engines if e.healthy)
+        limit = int(cap * self.brownout_headroom)
+        excess = len(self.queue) - limit
+        if excess <= 0:
+            return
+        victims = sorted(
+            self.queue,
+            key=lambda r: (r.deadline is not None,
+                           -(r.deadline if r.deadline is not None
+                             else 0.0)))[:excess]
+        victim_ids = {id(r) for r in victims}
+        self.queue[:] = [r for r in self.queue if id(r) not in victim_ids]
+        for req in victims:
+            req.state = State.FAILED
+            req.fail_reason = "brownout shed"
+            req.t_done = now
+            self.metrics["brownout_shed"] += 1
+
+    def abort_request(self, req: Request, reason: str,
+                      now: float | None = None) -> None:
+        """Force one request to FAILED and release everything it holds
+        anywhere in the cluster (queue, handoff, backoff pool, decode
+        slot).  The last-resort terminal path (step budget exhausted)."""
+        if req.done:
+            return
+        now = time.monotonic() if now is None else now
+        # identity, not ==: Request is a dataclass over numpy fields
+        self.queue[:] = [r for r in self.queue if r is not req]
+        self.retrying = [r for r in self.retrying if r is not req]
+        self.handoff = [it for it in self.handoff if it[0] is not req]
+        for eng in self.decode_engines:
+            for slot, r in list(eng.active.items()):
+                if r is req:
+                    eng.active.pop(slot)
+                    eng.prefilling.pop(slot, None)
+                    eng.pool.release(slot)
+            eng.pending_retrievals = [r for r in eng.pending_retrievals
+                                      if r is not req]
+        req.state = State.FAILED
+        req.fail_reason = reason
+        req.t_done = now
+        self.metrics["aborted"] += 1
+
     # ---------------- scheduler phases -------------------------------------
 
     def _expire(self, now: float) -> None:
-        """Deadline sweep over both waiting pools.  Requests already
-        holding a decode slot run to completion (same policy as the
-        single-engine server)."""
+        """Deadline sweep over every waiting pool (admission queue,
+        handoff queue, retry backoff).  Requests already holding a decode
+        slot run to completion (same policy as the single-engine
+        server)."""
         keep = []
         for req in self.queue:
             if req.deadline is not None and now > req.deadline:
@@ -173,62 +376,136 @@ class RAGCluster:
             else:
                 kept.append(item)
         self.handoff[:] = kept
+        still = []
+        for req in self.retrying:
+            if req.deadline is not None and now > req.deadline:
+                req.state = State.EXPIRED       # RETRYING -> EXPIRED
+                req.t_done = now
+                self.metrics["expired_retrying"] += 1
+            else:
+                still.append(req)
+        self.retrying[:] = still
 
     def _run_prefill(self, idx: int, req: Request) -> None:
         """Full prefill-group pass on engine ``idx``: executors, prompt
         assembly, bucketed prefill, then KV export + slot release.  The
-        request leaves in ``HANDOFF`` carrying its exported cache prefix."""
+        request leaves in ``HANDOFF`` carrying its exported cache prefix
+        and its checksum.  The staging slot is released on EVERY path
+        (``finally``), so an exception can never leak it; the caller
+        (:meth:`_dispatch_prefill`) classifies the failure and recovers
+        the request."""
         eng = self.prefill_engines[idx]
+        inj = self.injector
+        if inj is not None and inj.fire("stage_error", engine=idx,
+                                        rid=req.rid):
+            raise TransientStageError(
+                f"injected stage error on prefill engine {idx}")
         for ex in eng.executors:
             with eng._timed(ex.name):
                 ex.run(eng, req)
         req.prompt = eng._assemble_prompt(req)
+        if inj is not None and inj.fire("prefill_crash", engine=idx,
+                                        rid=req.rid):
+            eng.fail("injected prefill crash")
+            raise EngineCrash(f"prefill engine {idx} crashed mid-request")
         slot = eng.pool.alloc(req.rid)
-        with eng._timed("prefill"):
-            eng.prefill_compute(req, slot)
-        kv, length = eng.pool.export_slot(slot)
-        eng.pool.release(slot)
+        try:
+            with eng._timed("prefill"):
+                eng.prefill_compute(req, slot)
+            kv, length = eng.pool.export_slot(slot)
+        finally:
+            eng.pool.release(slot)
+        # checksum at export; verified before import, so wire corruption
+        # is rejected instead of decoded
+        checksum = payload_checksum(kv)
+        full_bytes = payload_nbytes(kv)
+        if inj is not None:
+            if inj.fire("handoff_drop", engine=idx, rid=req.rid):
+                kv = None                      # lost "on the wire"
+            elif inj.fire("handoff_corrupt", engine=idx, rid=req.rid):
+                kv = inj.corrupt(kv)
         req.state = State.HANDOFF
+        self.prefill_history.setdefault(req.rid, []).append(idx)
         self.prefill_of[req.rid] = idx
         self._prefill_load[idx] += len(req.prompt)
         self.metrics["handoffs"] += 1
         # full payload accounted here; what actually ships is known only
         # at import time (the destination may already cache some pages)
-        self.metrics["handoff_bytes_full"] += payload_nbytes(kv)
-        self.handoff.append((req, kv, length, self._seq))
+        self.metrics["handoff_bytes_full"] += full_bytes
+        self.handoff.append((req, kv, length, self._seq, checksum))
         self._seq += 1
 
     def _dispatch_prefill(self) -> None:
-        """Least-loaded dispatch: at most one queued request per prefill
-        engine per step (load = cumulative prompt tokens processed), so a
-        burst saturates the whole group instead of head-of-line blocking
-        one engine."""
+        """Least-loaded dispatch over the HEALTHY prefill engines: at most
+        one queued request per engine per step (load = cumulative prompt
+        tokens processed), so a burst saturates the whole group instead
+        of head-of-line blocking one engine.  A failure during the pass
+        never wedges the cluster: the engine is marked (DEAD for a crash,
+        DEGRADED for a transient error) and the request recovers through
+        the retry path."""
         used: set[int] = set()
-        n = len(self.prefill_engines)
-        while self.queue and len(used) < n:
-            idx = min((i for i in range(n) if i not in used),
-                      key=lambda i: self._prefill_load[i])
-            self._run_prefill(idx, self.queue.pop(0))
+        while self.queue:
+            healthy = [i for i, e in enumerate(self.prefill_engines)
+                       if e.healthy and i not in used]
+            if not healthy:
+                break
+            idx = min(healthy, key=lambda i: self._prefill_load[i])
             used.add(idx)
+            req = self.queue.pop(0)
+            try:
+                self._run_prefill(idx, req)
+            except EngineCrash:
+                self.prefill_engines[idx].fail("crashed mid-prefill")
+                self._note_dead("prefill", idx)
+                self._schedule_retry(req, f"prefill engine {idx} died")
+            except Exception as e:      # transient stage error or a bug
+                self.prefill_engines[idx].degrade()
+                self.metrics["stage_errors"] += 1
+                self._schedule_retry(req, f"stage error: {e!r}")
 
     def _assign_decode(self) -> None:
         """Deadline-aware decode-slot assignment: earliest deadline first
-        (FIFO among deadline-free requests), each placed on the decode
-        engine with the most free slots."""
+        (FIFO among deadline-free requests), each placed on the healthy
+        decode engine with the most free slots.  The payload checksum is
+        verified first and traffic is charged only AFTER the import
+        succeeded -- a corrupt, dropped or unimportable payload sends the
+        request back through the retry path instead of decoding garbage
+        (and never inflates ``handoff_bytes``)."""
         self.handoff.sort(key=lambda it: (
             it[0].deadline if it[0].deadline is not None else float("inf"),
             it[3]))
         waiting = []
+        now = time.monotonic()
         for item in self.handoff:
-            req, kv, length, _seq = item
-            idx = max(range(len(self.decode_engines)),
+            req, kv, length, _seq, checksum = item
+            if kv is None:                     # payload lost in transit
+                self.metrics["handoff_dropped"] += 1
+                self._schedule_retry(req, "handoff payload dropped", now)
+                continue
+            healthy = [i for i, e in enumerate(self.decode_engines)
+                       if e.healthy]
+            if not healthy:
+                waiting.append(item)           # health sweep will fail them
+                continue
+            idx = max(healthy,
                       key=lambda i: len(self.decode_engines[i].pool.free))
             eng = self.decode_engines[idx]
             if not eng.pool.free:
-                waiting.append(item)        # every engine is full
+                waiting.append(item)        # every healthy engine is full
+                continue
+            if payload_checksum(kv) != checksum:
+                self.metrics["handoff_corrupt"] += 1
+                self._schedule_retry(req, "handoff payload corrupt", now)
                 continue
             slot = eng.pool.alloc(req.rid)
-            stats = eng.pool.import_slot(slot, kv, length)
+            try:
+                stats = eng.pool.import_slot(slot, kv, length)
+            except Exception as e:             # malformed payload
+                eng.pool.release(slot)
+                self.metrics["handoff_corrupt"] += 1
+                self._schedule_retry(req, f"handoff import failed: {e!r}",
+                                     now)
+                continue
             self.metrics["handoff_bytes"] += stats.nbytes
             self.metrics["handoff_pages"] += stats.pages
             self.metrics["handoff_pages_shared"] += stats.pages_shared
@@ -236,35 +513,54 @@ class RAGCluster:
             req.t_decode = time.monotonic()
             req.state = State.DECODE
             eng.active[slot] = req
+            self.decode_history.setdefault(req.rid, []).append(idx)
             self.decode_of[req.rid] = idx
         self.handoff[:] = waiting
 
     def _decode_tick(self) -> None:
-        """One decode iteration per busy decode engine (iterative
-        retrieval dispatch + fused decode step)."""
-        for eng in self.decode_engines:
+        """One decode iteration per busy healthy decode engine (iterative
+        retrieval dispatch + fused decode step).  An injected or detected
+        crash drains the engine's requests back into the pipeline in the
+        same step."""
+        for idx, eng in enumerate(self.decode_engines):
+            if not eng.healthy:
+                continue
             if not (eng.active or eng.pending_retrievals):
                 continue
-            eng._dispatch_iterative(
-                force=not any(r.state is State.DECODE
-                              for r in eng.active.values()))
-            eng._decode_step()
+            if self.injector is not None and self.injector.fire(
+                    "decode_crash", engine=idx):
+                eng.fail("injected decode crash")
+                self._drain_dead_decode(idx, time.monotonic())
+                continue
+            try:
+                eng._dispatch_iterative(
+                    force=not any(r.state is State.DECODE
+                                  for r in eng.active.values()))
+                eng._decode_step()
+            except EngineCrash:
+                eng.fail("crashed mid-decode")
+                self._drain_dead_decode(idx, time.monotonic())
 
     # ---------------- driving ----------------------------------------------
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue or self.handoff
+        return bool(self.queue or self.handoff or self.retrying
                     or any(e.active or e.pending_retrievals
                            for e in self.decode_engines))
 
     def step(self) -> bool:
-        """One cluster iteration: deadline sweep -> prefill dispatch ->
-        decode-slot assignment -> decode tick.  Returns True while work
-        remains anywhere in the cluster."""
-        self._expire(time.monotonic())
+        """One cluster iteration: health sweep -> deadline sweep -> retry
+        requeue -> brownout -> prefill dispatch -> decode-slot assignment
+        -> decode tick.  Returns True while work remains anywhere in the
+        cluster (including requests waiting out a retry backoff)."""
+        now = time.monotonic()
+        self._health_sweep(now)
+        self._expire(now)
         if not self.busy:
             return False
+        self._requeue_retries(now)
+        self._brownout(now)
         self._dispatch_prefill()
         self._assign_decode()
         self._decode_tick()
@@ -273,7 +569,8 @@ class RAGCluster:
     def flush(self) -> None:
         """Force out sub-batch iterative retrievals (drain tail)."""
         for eng in self.decode_engines:
-            eng._dispatch_iterative(force=True)
+            if eng.healthy:
+                eng._dispatch_iterative(force=True)
 
     # ---------------- tail-latency accounting ------------------------------
 
@@ -283,7 +580,11 @@ class RAGCluster:
         later decoded), TPOT the decode group's -- measured from
         decode-slot assignment (``t_decode``), so time spent waiting in
         the handoff queue is charged to the scheduler, not to the decode
-        engine's per-token speed."""
+        engine's per-token speed.  A retried request is attributed to the
+        engine that served its final pass (``prefill_of``/``decode_of``);
+        ``*_history`` in this summary counts every pass, so failed
+        attempts stay visible per engine.  ``health`` reports each
+        engine's HEALTHY/DEGRADED/DEAD state."""
         by_prefill: dict[int, list] = {i: [] for i
                                        in range(len(self.prefill_engines))}
         by_decode: dict[int, list] = {i: [] for i
@@ -297,12 +598,31 @@ class RAGCluster:
                     (req.t_done - req.t_decode) / (len(req.output) - 1))
         all_ttft = [t for v in by_prefill.values() for t in v]
         all_tpot = [t for v in by_decode.values() for t in v]
+        passes_p = [0] * len(self.prefill_engines)
+        for rids in self.prefill_history.values():
+            for i in rids:
+                passes_p[i] += 1
+        passes_d = [0] * len(self.decode_engines)
+        for rids in self.decode_history.values():
+            for i in rids:
+                passes_d[i] += 1
+        scheduler = dict(self.metrics)
+        scheduler["degraded_answers"] = sum(
+            e.metrics["degraded_answers"]
+            for e in self.prefill_engines + self.decode_engines)
+        backends = {id(e.backend): e.backend
+                    for e in self.prefill_engines + self.decode_engines
+                    if hasattr(e.backend, "metrics")}
+        scheduler["retrieval_fallbacks"] = sum(
+            b.metrics.get("fallbacks", 0) for b in backends.values())
+        scheduler["retrieval_no_context"] = sum(
+            b.metrics.get("no_context", 0) for b in backends.values())
         return {
             "prefill": {
                 "n_engines": len(self.prefill_engines),
                 "ttft_s": percentiles(all_ttft),
                 "per_engine": [
-                    {"n": len(by_prefill[i]),
+                    {"n": len(by_prefill[i]), "passes": passes_p[i],
                      "ttft_s": percentiles(by_prefill[i])}
                     for i in range(len(self.prefill_engines))],
             },
@@ -310,11 +630,15 @@ class RAGCluster:
                 "n_engines": len(self.decode_engines),
                 "tpot_s": percentiles(all_tpot),
                 "per_engine": [
-                    {"n": len(by_decode[i]),
+                    {"n": len(by_decode[i]), "passes": passes_d[i],
                      "tpot_s": percentiles(by_decode[i])}
                     for i in range(len(self.decode_engines))],
             },
-            "scheduler": dict(self.metrics),
+            "health": {
+                "prefill": [e.health.value for e in self.prefill_engines],
+                "decode": [e.health.value for e in self.decode_engines],
+            },
+            "scheduler": scheduler,
         }
 
     def describe(self) -> str:
@@ -326,4 +650,6 @@ class RAGCluster:
                 f"{m['handoff_bytes_full'] / 1e6:.2f} MB, "
                 f"{m['handoff_pages_shared']} pages deduped), "
                 f"shed {m['shed_requests']}, "
-                f"expired {m['expired_queued']}+{m['expired_in_handoff']}]")
+                f"expired {m['expired_queued']}+{m['expired_in_handoff']}, "
+                f"failures {m['engine_failures']}, "
+                f"retried {m['requests_retried']}]")

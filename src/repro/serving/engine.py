@@ -69,7 +69,9 @@ import numpy as np
 
 from repro.core.stage_registry import REGISTRY
 from repro.models import transformer as tr
-from repro.retrieval.backend import make_backend
+from repro.retrieval.backend import (ExactBackend, FallbackBackend,
+                                     make_backend)
+from repro.serving.faults import EngineCrash, EngineHealth
 from repro.serving.kv_cache import KVCachePool, PagedKVCachePool
 from repro.serving.request import Request, State
 
@@ -98,6 +100,9 @@ class EngineConfig:
     retrieval_backend: str = "exact"       # "exact" | "ivfpq"
     nprobe: int = 8                        # IVF lists probed per query
     use_pq_kernel: bool | None = None      # None = Pallas kernel on TPU only
+    # graceful degradation: wrap the backend in a FallbackBackend chain
+    # (primary -> exact scan -> no-context); bit-transparent without faults
+    retrieval_fallback: bool = True
     # decode-step fusion (False keeps the pre-fusion path for parity tests)
     fused_decode: bool = True
     # decode attention implementation.  "auto" resolves at engine
@@ -209,7 +214,13 @@ class RAGEngine:
                         "prefill_compiles": 0, "append_compiles": 0,
                         "host_syncs": 0, "decode_host_syncs": 0,
                         "cache_copy_bytes": 0, "capacity_stops": 0,
-                        "stage_time_s": {}}
+                        "degraded_answers": 0, "stage_time_s": {}}
+        # fault layer: health is driven by fail()/degrade() (the injector
+        # or a real prober); a DEAD engine refuses work until replaced
+        self.health = EngineHealth.HEALTHY
+        self.fail_reason: str | None = None
+        self.injector = None
+        self._retrieval_degraded = False
         # resolved decode-attention implementation ("auto" picks by backend)
         self.attn_impl = cfg.attn_impl if cfg.attn_impl != "auto" else (
             "pallas" if jax.default_backend() == "tpu" else "ref")
@@ -229,11 +240,58 @@ class RAGEngine:
         # database embeddings (the paper's offline encode step)
         self.db_vectors = (np.asarray(db_vectors) if db_vectors is not None
                            else np.asarray(self._embed_batched(self.corpus)))
-        self.backend = backend if backend is not None else make_backend(
+        primary = backend if backend is not None else make_backend(
             cfg.retrieval_backend, self.db_vectors, nprobe=cfg.nprobe,
             use_pq_kernel=cfg.use_pq_kernel)
+        if cfg.retrieval_fallback and not isinstance(primary,
+                                                     FallbackBackend):
+            # degradation ladder: primary -> exact scan -> no-context
+            # (bit-transparent while the primary keeps answering)
+            chain = [primary]
+            if primary.name != "exact":
+                chain.append(ExactBackend(self.db_vectors))
+            primary = FallbackBackend(chain)
+        self.backend = primary
         # executable pipeline, derived from the stage registry
         self.executors = REGISTRY.engine_executors(self)
+
+    # ---------------- health / fault API ------------------------------------
+
+    @property
+    def healthy(self) -> bool:
+        return self.health is not EngineHealth.DEAD
+
+    def fail(self, reason: str = "injected") -> None:
+        """Declare this engine dead (crash injection or a real health
+        prober).  DEAD is permanent: the cluster stops scheduling onto the
+        engine and recovers its in-flight requests; any further use of the
+        engine raises :class:`EngineCrash`."""
+        self.health = EngineHealth.DEAD
+        self.fail_reason = reason
+
+    def degrade(self) -> None:
+        """Record a survived transient fault (still serving)."""
+        if self.health is EngineHealth.HEALTHY:
+            self.health = EngineHealth.DEGRADED
+
+    def check_alive(self) -> None:
+        if self.health is EngineHealth.DEAD:
+            raise EngineCrash(f"engine is dead ({self.fail_reason})")
+
+    def set_injector(self, injector) -> None:
+        """Thread a FaultInjector through this engine's fault points
+        (currently the retrieval fallback chain)."""
+        self.injector = injector
+        if isinstance(self.backend, FallbackBackend):
+            self.backend.injector = injector
+
+    def note_retrieval_degraded(self, req: Request) -> None:
+        """Flag ``req`` as degraded if its last retrieval was served with
+        no context at all (every fallback level failed); counted once per
+        request in ``metrics['degraded_answers']``."""
+        if self._retrieval_degraded and not req.degraded:
+            req.degraded = True
+            self.metrics["degraded_answers"] += 1
 
     # ---------------- shared primitives -----------------------------------
 
@@ -327,6 +385,9 @@ class RAGEngine:
             qv = self._embed_batched(queries)
         with self._timed("retrieve"):
             _, idx = self.backend.search(qv, k)
+        # did the fallback chain bottom out (no-context) on this call?
+        self._retrieval_degraded = \
+            getattr(self.backend, "last_level", 0) == -1
         self.metrics["host_syncs"] += 1
         return np.asarray(idx)
 
@@ -514,6 +575,8 @@ class RAGEngine:
             qs = np.stack([self._iter_query(req) for req in batch])
             ids = self.retrieve(qs, 1)
             self.metrics["retrieval_batches"] += 1
+            for req in batch:
+                self.note_retrieval_degraded(req)
             for req, docs in zip(batch, ids):
                 if req.state is not State.WAIT_RETRIEVAL:
                     continue                    # finished (EOS) while queued
@@ -667,6 +730,7 @@ class RAGEngine:
         due iterative retrievals, take one decode step.  Admission and
         eviction (slot release on DONE/capacity) both happen inside every
         tick, so the decode batch re-forms continuously."""
+        self.check_alive()
         self._admit()
         self._prefill_tick()
         self._dispatch_iterative(
@@ -680,8 +744,35 @@ class RAGEngine:
         out = dict(self.metrics)
         out["stage_time_s"] = dict(self.metrics["stage_time_s"])
         out["attn_impl"] = self.attn_impl
+        out["health"] = self.health.value
+        if isinstance(self.backend, FallbackBackend):
+            out["retrieval_fallbacks"] = self.backend.metrics["fallbacks"]
+            out["retrieval_no_context"] = self.backend.metrics["no_context"]
         out.update(getattr(self.pool, "metrics", {}))
         return out
+
+    def abort_request(self, req: Request, reason: str,
+                      now: float | None = None) -> None:
+        """Force ``req`` to the FAILED terminal state and release every
+        resource it holds here (queue entry, decode slot, pending
+        iterative retrieval, chunked-prefill cursor).  The last-resort
+        path that keeps the exactly-one-terminal-state invariant when the
+        serving loop gives up (step budget exhausted, engine group
+        unservable)."""
+        if req.done:
+            return
+        # identity, not ==: Request is a dataclass over numpy fields
+        self.queue[:] = [r for r in self.queue if r is not req]
+        self.pending_retrievals = [r for r in self.pending_retrievals
+                                   if r is not req]
+        for slot, r in list(self.active.items()):
+            if r is req:
+                self.active.pop(slot)
+                self.prefilling.pop(slot, None)
+                self.pool.release(slot)
+        req.state = State.FAILED
+        req.fail_reason = reason
+        req.t_done = now if now is not None else time.monotonic()
 
     def serve(self, requests: list[Request],
               max_steps: int = 10000) -> list[Request]:

@@ -124,8 +124,10 @@ class RetrieveExecutor:
         # the base query keeps its own length; generated variants all share
         # one length, so they batch into a single database scan
         per_query = [eng.retrieve(queries[0][None], k)[0]]
+        eng.note_retrieval_degraded(req)
         if len(queries) > 1:
             per_query += list(eng.retrieve(np.stack(queries[1:]), k))
+            eng.note_retrieval_degraded(req)
         seen, ids = set(), []
         for rank in range(k):
             for cand in per_query:

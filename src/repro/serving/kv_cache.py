@@ -33,6 +33,7 @@ capacity instead.
 from __future__ import annotations
 
 import hashlib
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -465,3 +466,30 @@ def payload_nbytes(prefix) -> int:
     if isinstance(prefix, PagedPrefix):
         return prefix.nbytes
     return KVCachePool.handoff_bytes(prefix)
+
+
+def payload_checksum(prefix) -> int:
+    """CRC32 over an exported KV payload's bytes (+ its logical layout).
+
+    Computed at export and verified before import, so a handoff payload
+    corrupted or truncated "on the wire" is REJECTED and the request
+    retried instead of decoding from a garbage context -- the fault
+    layer's end of the bit-exact handoff contract.  Covers both layouts:
+    the paged :class:`PagedPrefix` (page order, chain keys and page bytes
+    all feed the sum) and the dense ``{"k","v"}`` dict."""
+    crc = 0
+    if isinstance(prefix, PagedPrefix):
+        crc = zlib.crc32(
+            f"{prefix.page_size}:{prefix.length}".encode(), crc)
+        for j in sorted(prefix.pages):
+            key = prefix.keys[j] if j < len(prefix.keys) else None
+            crc = zlib.crc32(key or b"\0", crc)
+            page = prefix.pages[j]
+            for name in sorted(page):
+                crc = zlib.crc32(np.ascontiguousarray(
+                    np.asarray(page[name])).view(np.uint8), crc)
+        return crc
+    for name in sorted(prefix):
+        crc = zlib.crc32(np.ascontiguousarray(
+            np.asarray(prefix[name])).view(np.uint8), crc)
+    return crc

@@ -51,6 +51,16 @@ from repro.serving.cluster import RAGCluster, percentiles
 from repro.serving.request import Request, State
 
 
+class RequestStalledError(RuntimeError):
+    """The server went idle while a request was still non-terminal.
+
+    With the fault-recovery layer every submitted request is supposed to
+    reach exactly one terminal state (DONE / EXPIRED / FAILED); an idle
+    server holding a non-terminal request means that invariant broke, and
+    the streaming APIs surface it loudly instead of silently returning a
+    partial stream."""
+
+
 class RequestHandle:
     """Caller-side view of one submitted request."""
 
@@ -94,7 +104,11 @@ class RequestHandle:
     def tokens(self) -> Iterator[int]:
         """Per-token stream.  Iterating drives the server (``step()``)
         until this request reaches a terminal state, yielding each token
-        as it is generated; tokens already streamed are replayed first."""
+        as it is generated; tokens already streamed are replayed first.
+        The stream ends ONLY at a terminal state -- if the server goes
+        idle with this request still stuck (starvation, not completion),
+        :class:`RequestStalledError` is raised rather than silently
+        truncating the stream."""
         i = 0
         while True:
             while i < len(self._streamed):
@@ -104,12 +118,22 @@ class RequestHandle:
                 return
             if not self.server.step() and not self.done \
                     and len(self._streamed) == i:
-                return          # server idle; request never completed
+                raise RequestStalledError(
+                    f"server idle with request {self.rid} still in state "
+                    f"{self.state.value!r}; it will never reach a "
+                    f"terminal state")
 
     def result(self) -> Request:
-        """Drive the server until this request is terminal; return it."""
+        """Drive the server until this request is terminal; return it.
+        Raises :class:`RequestStalledError` if the server goes idle
+        first -- the returned request is always DONE / EXPIRED /
+        FAILED, never silently mid-flight."""
         for _ in self.tokens():
             pass
+        if not self.done:
+            raise RequestStalledError(
+                f"request {self.rid} finished streaming in non-terminal "
+                f"state {self.state.value!r}")
         return self.request
 
 
@@ -263,13 +287,32 @@ class RAGServer:
         else:
             self.engine._dispatch_iterative(force=True)
 
-    def run_until_idle(self, max_steps: int = 10000) -> None:
-        """Drain all submitted work (the closed-loop tail)."""
+    def _abort(self, req: Request, reason: str, now=None) -> None:
+        if self.cluster is not None:
+            self.cluster.abort_request(req, reason, now)
+        else:
+            self.engine.abort_request(req, reason, now)
+
+    def run_until_idle(self, max_steps: int = 10000) -> int:
+        """Drain all submitted work (the closed-loop tail).  Returns the
+        number of steps taken.  If the step budget runs out with work
+        still in flight, the survivors are aborted to ``State.FAILED``
+        (releasing their slots) instead of being silently abandoned
+        mid-pipeline -- every submitted request still ends terminal."""
         steps = 0
         while steps < max_steps and self.step():
             steps += 1
         self._flush()
         self._deliver()
+        if self._busy():
+            now = time.monotonic()
+            for h in list(self.handles.values()):
+                if not h.request.done:
+                    self._abort(h.request,
+                                f"step budget exhausted after {steps} steps",
+                                now)
+            self._deliver()
+        return steps
 
     # ---------------- arrival drivers --------------------------------------
 

@@ -97,11 +97,13 @@ def test_kv_import_rejects_oversized_prefix():
 # ---------------------------------------------------------------------------
 
 def test_handoff_transitions_are_legal():
-    """PREFILL -> HANDOFF -> {DECODE, EXPIRED} is part of the lifecycle
-    contract; HANDOFF is unreachable except from PREFILL."""
+    """PREFILL -> HANDOFF -> DECODE is the lifecycle contract, with
+    EXPIRED (deadline in the handoff queue) and the fault-recovery exits
+    (RETRYING for a corrupt/dropped payload, FAILED when recovery is
+    impossible); HANDOFF is unreachable except from PREFILL."""
     assert State.HANDOFF in LEGAL_TRANSITIONS[State.PREFILL]
     assert LEGAL_TRANSITIONS[State.HANDOFF] == frozenset(
-        {State.DECODE, State.EXPIRED})
+        {State.DECODE, State.EXPIRED, State.RETRYING, State.FAILED})
     for state, nxt in LEGAL_TRANSITIONS.items():
         if state is not State.PREFILL:
             assert State.HANDOFF not in nxt, state

@@ -217,3 +217,66 @@ def test_stage_time_accounting(stack):
     for stage in ("embed", "retrieve", "retrieval", "prefill", "decode",
                   "append"):
         assert t.get(stage, 0.0) > 0.0, f"no wall time for {stage}"
+
+
+# ---------------------------------------------------------------------------
+# Termination guarantees: stalled streams raise, run_until_idle reports
+# ---------------------------------------------------------------------------
+
+def test_run_until_idle_returns_step_count(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack))
+    srv.submit(make_q(0), max_new_tokens=3)
+    steps = srv.run_until_idle()
+    assert isinstance(steps, int) and 0 < steps < 10000
+    assert srv.run_until_idle() == 0           # idle server: free no-op
+
+
+def test_run_until_idle_budget_aborts_survivors(stack):
+    """Exhausting the step budget must not abandon requests mid-pipeline:
+    survivors are forced to FAILED with their slots released, keeping the
+    exactly-one-terminal-state invariant."""
+    _, _, _, _, make_q = stack
+    eng = _engine(stack)
+    srv = RAGServer(eng)
+    handles = [srv.submit(make_q(i % 4), max_new_tokens=5)
+               for i in range(4)]
+    steps = srv.run_until_idle(max_steps=2)    # nowhere near enough
+    assert steps == 2
+    assert all(h.request.state in TERMINAL_STATES for h in handles)
+    failed = [h for h in handles if h.request.state is State.FAILED]
+    assert failed
+    assert all("step budget exhausted" in h.request.fail_reason
+               for h in failed)
+    assert not eng.active and not eng.queue    # nothing left holding slots
+    for h in handles:
+        assert_legal_lifecycle(h.request)
+
+
+def test_stalled_stream_raises_instead_of_truncating(stack):
+    """tokens()/result() must distinguish starvation from completion: a
+    request that can never finish (engine group dead before any step)
+    raises RequestStalledError rather than silently ending the stream."""
+    from repro.serving.server import RequestStalledError
+    eng = _engine(stack)
+    srv = RAGServer(eng)
+    h = srv.submit(stack[4](0), max_new_tokens=3)
+    # engine dies before the first step: tick() raises EngineCrash, so
+    # simulate the stall by emptying the queue behind the server's back
+    # (the request is then starved: server idle, request non-terminal)
+    eng.queue.clear()
+    with pytest.raises(RequestStalledError):
+        for _ in h.tokens():
+            pass
+    assert not h.done
+    with pytest.raises(RequestStalledError):
+        h.result()
+
+
+def test_result_reaches_terminal_state(stack):
+    _, _, _, _, make_q = stack
+    srv = RAGServer(_engine(stack))
+    h = srv.submit(make_q(1), max_new_tokens=4)
+    req = h.result()
+    assert req.state is State.DONE
+    assert req is h.request and len(req.output) == 4

@@ -179,3 +179,70 @@ def test_compare_cli_exits_nonzero_on_regression(tmp_path):
         cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
     assert res.returncode != 0
     assert "PERF REGRESSION" in res.stderr
+
+
+def test_serving_bench_faults_smoke(tmp_path):
+    """--faults drives the pinned chaos schedule through a 2+2 cluster and
+    must report the termination invariant intact with nonzero recovery
+    activity."""
+    out = tmp_path / "BENCH_serving.json"
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "serving_bench.py"),
+         "--smoke", "--backends", "exact", "--faults", "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    row = json.loads(out.read_text())["faults"]
+    assert row["schedule"] == "combined"
+    assert row["all_terminal"] is True and row["no_leaks"] is True
+    assert row["faults_fired"] > 0
+    assert 0.0 <= row["goodput"] <= 1.0
+    assert (row["n_done"] + 0) <= row["n_requests"]
+    rec = row["recovery"]
+    assert rec["requests_retried"] > 0      # the schedule forced recovery
+    # the gate passes against the run's own output
+    bench = _bench_module()
+    data = json.loads(out.read_text())
+    assert bench.compare_results(data, data) == []
+
+
+def test_compare_results_gates_goodput_under_faults():
+    """Robustness regressions fail the gate: goodput under the pinned
+    chaos schedule dropping past tolerance, or the termination invariant
+    breaking in the CURRENT run (gated even without a previous row)."""
+    bench = _bench_module()
+    prev = {"presets": {}, "faults": {
+        "schedule": "combined", "goodput": 1.0,
+        "all_terminal": True, "no_leaks": True}}
+
+    ok = {"presets": {}, "faults": {
+        "schedule": "combined", "goodput": 0.9,
+        "all_terminal": True, "no_leaks": True}}
+    assert bench.compare_results(ok, prev, tolerance=0.25) == []
+
+    lossy = {"presets": {}, "faults": {
+        "schedule": "combined", "goodput": 0.5,
+        "all_terminal": True, "no_leaks": True}}
+    regs = bench.compare_results(lossy, prev, tolerance=0.25)
+    assert len(regs) == 1 and "goodput" in regs[0]
+
+    broken = {"presets": {}, "faults": {
+        "schedule": "combined", "goodput": 1.0,
+        "all_terminal": False, "no_leaks": False}}
+    regs = bench.compare_results(broken, prev, tolerance=0.25)
+    assert len(regs) == 2
+    assert any("termination invariant" in r for r in regs)
+    assert any("leak" in r for r in regs)
+    # invariant is gated even without a previous faults row
+    regs = bench.compare_results(broken, {"presets": {}}, tolerance=0.25)
+    assert len(regs) == 2
+
+    # schedule changed -> goodput not comparable, invariant still gated
+    other = {"presets": {}, "faults": {
+        "schedule": "prefill_crash", "goodput": 0.1,
+        "all_terminal": True, "no_leaks": True}}
+    assert bench.compare_results(other, prev, tolerance=0.25) == []
+
+    # legacy files without a faults row are not gated
+    assert bench.compare_results({"presets": {}}, prev) == []
