@@ -38,10 +38,19 @@ Modes:
                            #   handoff corruption, retrieval timeouts) and
                            #   report goodput, recovery counters and the
                            #   termination invariant under faults
+    ... --autoscale        # drive a minimal 1+1 cluster through a scripted
+                           #   workload shift (low-rate phase A -> high-rate
+                           #   phase B) with the live ClusterController
+                           #   attached: drift detection, calibrated
+                           #   re-plan, zero-drop make-before-break resize.
+                           #   Reports goodput, dropped count, p99 TTFT
+                           #   before/during/after the resize, bit-parity
+                           #   vs an unresized run, and post-resize p99 vs
+                           #   a fresh deploy at the final size
     ... --compare PREV.json [--tolerance 0.25]
                            # nonzero exit on QPS / TPOT / p99-tail /
-                           # goodput-under-faults regression vs a previous
-                           # BENCH_serving.json
+                           # goodput-under-faults / autoscale regression vs
+                           # a previous BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -370,6 +379,194 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
     }
 
 
+def run_autoscale(corpus, make_q, max_new_tokens: int) -> dict:
+    """Workload-shift benchmark for the live control plane: a minimal
+    1-prefill + 1-decode cluster serves a scripted two-phase trace (a
+    quiet phase A at ``LOW`` QPS, then a regime shift to phase B at
+    ``HIGH`` QPS) with a :class:`~repro.serving.controller.
+    ClusterController` attached.  The controller must detect the drift,
+    re-plan over *calibrated* specs, and execute a make-before-break
+    resize while traffic keeps flowing.
+
+    Three runs back the row's invariants:
+
+    * the **autoscale** run itself -- goodput, dropped count (must be 0:
+      a resize may delay a request, never drop one), re-plan / resize
+      counts, and p99 TTFT before / during / after the resize;
+    * a **static** run of the same trace through an identical unresized
+      1+1 cluster -- the autoscale run's greedy outputs must be
+      bit-identical to it (migration re-prefills exactly);
+    * a **fresh deploy** at the autoscale run's final size serving the
+      phase-B suffix from a clean start -- over the *same post-settle
+      trace entries* (arrivals after the resize's settle window, when
+      the migration backlog has drained), the autoscale run's p99 TTFT
+      must be within 2x of the fresh deploy's (the resized cluster
+      converges to what a from-scratch deployment of the same size
+      delivers; pairing the exact arrival subset keeps the gate free of
+      sample-size artifacts).
+
+    All three invariants land in ``BENCH_serving.json["autoscale"]`` and
+    are gated by ``--compare`` (dropped > 0 fails unconditionally)."""
+    from repro.configs.rag_pipelines import PRESETS
+    from repro.core.hardware import SystemConfig, XPU_C
+    from repro.core.serving_plan import ServingPlan
+    from repro.serving.cluster import RAGCluster, percentiles
+    from repro.serving.controller import ClusterController, DriftDetector
+    from repro.serving.engine import RAGEngine
+    from repro.serving.request import TERMINAL_STATES, Request, State
+    from repro.serving.server import RAGServer
+    from repro.serving.trace import synthesize_trace
+
+    schema = PRESETS["baseline"]()
+    system = SystemConfig(n_servers=4, xpu=XPU_C)
+    plan = ServingPlan.optimize(schema, system)
+    comps = _components(schema, vocab=128)
+    cfg = _engine_config(schema, "exact", s_max=128,
+                         max_new_tokens=max_new_tokens)
+    seed_eng = RAGEngine(comps["generative"], comps["encoder"], corpus, cfg)
+    # every engine across all three runs shares the same database and
+    # backend, so retrieval -- and therefore greedy output -- is a pure
+    # function of the question (what makes bit-parity checkable)
+    shared = dict(db_vectors=seed_eng.db_vectors, backend=seed_eng.backend)
+
+    def make_engine(group: str) -> RAGEngine:
+        eng = RAGEngine(comps["generative"], comps["encoder"], corpus,
+                        replace(cfg, decode_slots=1) if group == "prefill"
+                        else cfg, **shared)
+        # warm the jit caches off the serving path so a mid-trace
+        # scale-up does not pay compile time inside a request's TTFT
+        eng.serve([Request(question=make_q(0, q_len=8).copy(),
+                           max_new_tokens=2)])
+        return eng
+
+    def build_server(n_p: int, n_d: int) -> RAGServer:
+        return RAGServer(RAGCluster(
+            [make_engine("prefill") for _ in range(n_p)],
+            [make_engine("decode") for _ in range(n_d)],
+            retry_backoff=0.005))
+
+    # the scripted regime shift: same 4 popular questions as the preset
+    # rows (warm prompt buckets), fixed output length, no deadlines --
+    # nothing but the arrival rate changes at the phase boundary
+    LOW, HIGH = 1.2, 4.0
+    mk = (lambda rng, q_len: make_q(int(rng.integers(0, 4)), q_len=8))
+    kw = dict(diurnal_amplitude=0.0, burst_prob=0.0,
+              out_median=float(max_new_tokens), out_sigma=0.0,
+              out_max=max_new_tokens, presets=("baseline",),
+              make_question=mk)
+    phase_a = synthesize_trace(8, 128, mean_rate=LOW, seed=11, **kw)
+    # phase B runs long enough (~12 s) that the trace outlives the
+    # resize + settle window -- the gate needs post-settle arrivals
+    phase_b = synthesize_trace(48, 128, mean_rate=HIGH, seed=12,
+                               t0=phase_a[-1].arrival_s + 0.2, **kw)
+    trace = phase_a + phase_b
+
+    # -- run 1: autoscale (controller attached, in-band) ---------------
+    server = build_server(1, 1)
+    controller = ClusterController(
+        server, schema, system, plan, engine_factory=make_engine,
+        window_s=3.0, interval_s=0.3, reference_qps=LOW,
+        load_detector=DriftDetector(band=1.5, clear_band=0.5, patience=2),
+        tail_detector=DriftDetector(band=2.0, clear_band=0.5, patience=3),
+        min_engines=1, max_engines=2, min_window_arrivals=4,
+        settle_s=5.0).attach()
+    t0 = time.perf_counter()
+    handles = server.replay_trace(trace)
+    wall = time.perf_counter() - t0
+    reqs = [h.request for h in handles]
+    outputs = [[int(t) for t in r.output] for r in reqs]
+    done = [r for r in reqs if r.state is State.DONE]
+    cl = server.cluster
+    final_p, final_d = len(cl.prefill_engines), len(cl.decode_engines)
+    no_leaks = (not cl.queue and not cl.handoff and not cl.retrying
+                and all(not e.active and not e.pending_retrievals
+                        for e in cl.decode_engines)
+                and all(not e.active and not e.pending_retrievals
+                        for _g, _eid, e in cl.retired))
+
+    def p99(rs) -> float | None:
+        vals = [r.ttft for r in rs if r.ttft is not None]
+        return percentiles(vals)["p99"] if vals else None
+
+    resize_ts = [e["t"] for e in controller.events
+                 if e["event"] == "resize"]
+    rt = resize_ts[0] if resize_ts else None
+    if rt is None:
+        phases = {"before": done, "during": [], "after": []}
+        gate_idx = []
+    else:
+        settle_end = rt + controller.settle_s
+        tft = (lambda r: r.t_first_token or 0.0)
+        phases = {
+            "before": [r for r in done if tft(r) < rt],
+            "during": [r for r in done if rt <= tft(r) < settle_end],
+            "after": [r for r in done if tft(r) >= settle_end],
+        }
+        # the 2x gate samples requests that arrived after the resize's
+        # settle window -- the migration backlog has drained and the
+        # resized cluster is at its new steady state
+        gate_idx = [i for i, r in enumerate(reqs)
+                    if r.t_arrive >= settle_end]
+
+    # -- run 2: static bit-parity (same trace, no controller) ----------
+    static = build_server(1, 1)
+    s_handles = static.replay_trace(trace)
+    s_outputs = [[int(t) for t in h.request.output] for h in s_handles]
+    bit_identical = outputs == s_outputs
+
+    # -- run 3: fresh deploy at the final size, phase-B suffix ---------
+    b0 = phase_b[0].arrival_s
+    suffix = [replace(e, arrival_s=e.arrival_s - b0) for e in phase_b]
+    fresh = build_server(final_p, final_d)
+    f_handles = fresh.replay_trace(suffix)
+    # pair the gate on the SAME trace entries in both runs: identical
+    # questions, arrival pattern, and sample count -- the only variable
+    # left is whether the resized cluster converged to fresh-deploy
+    # behaviour
+    n_a = len(phase_a)
+    fresh_reqs = [h.request for h in f_handles]
+    gate_idx = [i for i in gate_idx if i >= n_a]
+    post_p99 = p99([reqs[i] for i in gate_idx
+                    if reqs[i].state is State.DONE])
+    fresh_p99 = p99([fresh_reqs[i - n_a] for i in gate_idx
+                     if fresh_reqs[i - n_a].state is State.DONE])
+    ratio = (round(post_p99 / fresh_p99, 3)
+             if post_p99 is not None and fresh_p99 else None)
+
+    sched = cl.group_summary()["scheduler"]
+    last_replan = next((e for e in reversed(controller.events)
+                        if e["event"] == "replan"), None)
+    return {
+        "trace": {"n": len(trace), "phase_a_qps": LOW,
+                  "phase_b_qps": HIGH, "phase_b_at_s": round(b0, 3)},
+        "initial": {"prefill": 1, "decode": 1},
+        "final": {"prefill": final_p, "decode": final_d},
+        "replans": controller.replans,
+        "resizes": controller.resizes,
+        "n_requests": len(reqs),
+        "n_done": len(done),
+        # the headline invariant: a resize may delay, never drop
+        "dropped": len(reqs) - len(done),
+        "goodput": round(len(done) / max(len(reqs), 1), 4),
+        "all_terminal": all(r.state in TERMINAL_STATES for r in reqs),
+        "no_leaks": no_leaks,
+        "bit_identical_vs_static": bit_identical,
+        "requests_migrated": sched["requests_migrated"],
+        "engines_added": sched["engines_added"],
+        "engines_removed": sched["engines_removed"],
+        "brownout_shed": sched["brownout_shed"],
+        "ttft_p99_s": {k: p99(v) for k, v in phases.items()},
+        "p99_gate": {"post_resize_ttft_p99_s": post_p99,
+                     "fresh_deploy_ttft_p99_s": fresh_p99,
+                     "n_samples": len(gate_idx),
+                     "ratio": ratio, "max_ratio": 2.0},
+        "calibrated": last_replan["calibrated"] if last_replan else None,
+        "calibration": (last_replan["calibration"]
+                        if last_replan else None),
+        "wall_s": round(wall, 4),
+    }
+
+
 def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     """QPS/TPOT/p99-tail regressions of ``cur`` vs a previous
     BENCH_serving.json.
@@ -393,7 +590,17 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     invariant (every request terminal, no leaked slots/pages) must hold
     in the CURRENT run unconditionally, and goodput under the pinned
     chaos schedule must not drop more than ``tolerance`` vs the previous
-    run.  Returns human-readable regression strings (empty == pass)."""
+    run.
+
+    ``autoscale`` rows (``--autoscale``) gate the live control plane's
+    invariants in the CURRENT run unconditionally: zero requests dropped
+    during the resize, every request terminal with no leaks, greedy
+    outputs bit-identical to the unresized run, at least one calibrated
+    re-plan + resize actually happened, and post-resize p99 TTFT within
+    the row's ``max_ratio`` (2x) of a fresh deploy at the final size.
+    Goodput is additionally gated against the previous run's autoscale
+    row with ``tolerance``.  Returns human-readable regression strings
+    (empty == pass)."""
     regressions = []
     gates = (("qps", "min", 1.0),
              ("tpot_s", "max", 1.0),
@@ -454,6 +661,41 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
                 regressions.append(
                     f"faults: goodput {new_f['goodput']} < {bound:.4f} "
                     f"(prev {old_f['goodput']}, tol {tolerance})")
+    new_a = cur.get("autoscale")
+    if new_a is not None:
+        if new_a.get("dropped", 0):
+            regressions.append(
+                f"autoscale: {new_a['dropped']} request(s) dropped -- a "
+                f"resize may delay a request, never drop one")
+        if not new_a.get("all_terminal", True):
+            regressions.append("autoscale: termination invariant violated "
+                               "(non-terminal request after drain)")
+        if not new_a.get("no_leaks", True):
+            regressions.append("autoscale: slot/page leak after drain")
+        if not new_a.get("bit_identical_vs_static", True):
+            regressions.append("autoscale: greedy outputs diverge from the "
+                               "unresized run (migration is not exact)")
+        if not new_a.get("replans", 0) or not new_a.get("resizes", 0):
+            regressions.append(
+                f"autoscale: the workload shift produced no re-plan/resize "
+                f"(replans={new_a.get('replans', 0)}, "
+                f"resizes={new_a.get('resizes', 0)})")
+        gate = new_a.get("p99_gate") or {}
+        ratio, cap = gate.get("ratio"), gate.get("max_ratio", 2.0)
+        if ratio is None or ratio > cap:
+            regressions.append(
+                f"autoscale: post-resize ttft p99 "
+                f"{gate.get('post_resize_ttft_p99_s')}s is {ratio}x a "
+                f"fresh deploy at the final size "
+                f"({gate.get('fresh_deploy_ttft_p99_s')}s; max {cap}x)")
+        old_a = prev.get("autoscale")
+        if (old_a and old_a.get("goodput")
+                and new_a.get("goodput") is not None):
+            bound = old_a["goodput"] * (1.0 - tolerance)
+            if new_a["goodput"] < bound:
+                regressions.append(
+                    f"autoscale: goodput {new_a['goodput']} < {bound:.4f} "
+                    f"(prev {old_a['goodput']}, tol {tolerance})")
     return regressions
 
 
@@ -516,6 +758,12 @@ def main(argv=None) -> dict:
                         "the pinned 'combined' chaos schedule and report "
                         "goodput + recovery counters + the termination "
                         "invariant under faults")
+    p.add_argument("--autoscale", action="store_true",
+                   help="also drive a 1+1 cluster through a scripted "
+                        "workload shift with the live ClusterController "
+                        "attached (drift -> calibrated re-plan -> "
+                        "zero-drop resize) and report the control-plane "
+                        "invariants")
     p.add_argument("--compare", default=None, metavar="PREV.json",
                    help="exit nonzero on QPS/TPOT regression vs a previous "
                         "BENCH_serving.json")
@@ -603,6 +851,25 @@ def main(argv=None) -> dict:
               f"retried={rec['requests_retried']} "
               f"failures={rec['engine_failures']} "
               f"degraded={rec['degraded_answers']}", flush=True)
+
+    if args.autoscale:
+        row = run_autoscale(corpus, make_q, max_new)
+        results["autoscale"] = row
+        g = row["p99_gate"]
+        print(f"autoscale: {row['initial']['prefill']}+"
+              f"{row['initial']['decode']} -> {row['final']['prefill']}+"
+              f"{row['final']['decode']} engines, "
+              f"replans={row['replans']} resizes={row['resizes']}, "
+              f"dropped={row['dropped']} "
+              f"({row['n_done']}/{row['n_requests']} done), "
+              f"migrated={row['requests_migrated']}, "
+              f"bit_identical={row['bit_identical_vs_static']}\n"
+              f"  ttft p99 before/during/after = "
+              f"{row['ttft_p99_s']['before']}/{row['ttft_p99_s']['during']}"
+              f"/{row['ttft_p99_s']['after']}s; post-resize vs fresh "
+              f"deploy = {g['post_resize_ttft_p99_s']}s vs "
+              f"{g['fresh_deploy_ttft_p99_s']}s "
+              f"({g['ratio']}x, max {g['max_ratio']}x)", flush=True)
 
     Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")

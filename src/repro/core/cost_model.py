@@ -296,3 +296,23 @@ def calibrate_xpu_decode(xpu: XPUSpec, decode_bytes_per_s: float) -> XPUSpec:
         raise ValueError("decode_bytes_per_s must be positive")
     return _replace(xpu, mem_eff=min(max(decode_bytes_per_s / xpu.mem_bw,
                                          1e-9), 1.0))
+
+
+def calibration_delta(nominal: XPUSpec, calibrated: XPUSpec) -> dict:
+    """Audit record of how far a calibrated XPU spec moved from nominal:
+    the efficiency knobs the calibrators fit (``flops_eff`` /
+    ``mem_eff``) plus their ratios.  Stored by
+    ``ServingPlan.optimize(..., xpu=...)`` in
+    ``plan.detail["calibration"]`` so every live re-plan says what it
+    measured, not just what it chose."""
+    return {
+        "name": calibrated.name,
+        "flops_eff": calibrated.flops_eff,
+        "mem_eff": calibrated.mem_eff,
+        "nominal_flops_eff": nominal.flops_eff,
+        "nominal_mem_eff": nominal.mem_eff,
+        "flops_eff_ratio": (calibrated.flops_eff / nominal.flops_eff
+                            if nominal.flops_eff > 0 else None),
+        "mem_eff_ratio": (calibrated.mem_eff / nominal.mem_eff
+                          if nominal.mem_eff > 0 else None),
+    }

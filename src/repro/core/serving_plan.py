@@ -50,6 +50,9 @@ class ServingPlan:
     iter_batch: int | None = None      # iterative retrieval batch (b_it)
     predicted: dict[str, float] = field(default_factory=dict)
     engine_overrides: dict[str, Any] = field(default_factory=dict)
+    detail: dict[str, Any] = field(default_factory=dict)  # provenance
+    # (e.g. which measured calibration produced the specs the search ran
+    # on -- ``detail["calibration"]`` -- so a live re-plan is auditable)
 
     # ---------------- construction -----------------------------------------
 
@@ -74,13 +77,39 @@ class ServingPlan:
 
     @classmethod
     def optimize(cls, schema: RAGSchema, system,
-                 objective: str = "qps_per_chip",
+                 objective: str = "qps_per_chip", *,
+                 xpu=None, host=None,
                  **engine_overrides) -> "ServingPlan":
         """The full paper workflow in one call: run the RAGO search over
         the schema on ``system`` and return the chosen plan
         (``objective``: ``"qps_per_chip"`` -- most cost-efficient plan
-        meeting capacity, Table 4 -- or ``"ttft"``)."""
+        meeting capacity, Table 4 -- or ``"ttft"``).
+
+        ``xpu`` / ``host`` substitute *calibrated* hardware specs (from
+        ``cost_model.calibrate_xpu`` / ``calibrate_xpu_decode`` /
+        ``retrieval_model.calibrate_host``) for the system's nominal
+        ones before the search runs -- the live control plane's
+        measured-not-assumed re-planning path.  Which substitutions were
+        applied (and how far each calibrated spec moved from nominal) is
+        recorded in ``plan.detail["calibration"]``, so every re-plan is
+        auditable after the fact."""
+        from dataclasses import replace as dc_replace
+
         from repro.core import optimizer as opt
+        calibration: dict[str, Any] = {}
+        if xpu is not None:
+            from repro.core.cost_model import calibration_delta
+            calibration["xpu"] = calibration_delta(system.xpu, xpu)
+            system = dc_replace(system, xpu=xpu)
+        if host is not None:
+            nominal_bw = system.host.pq_scan_bw_per_core
+            calibration["host"] = {
+                "pq_scan_bw_per_core": host.pq_scan_bw_per_core,
+                "nominal_bw_per_core": nominal_bw,
+                "ratio": (host.pq_scan_bw_per_core / nominal_bw
+                          if nominal_bw > 0 else None),
+            }
+            system = dc_replace(system, host=host)
         plans = opt.enumerate_plans(schema, system)
         if objective == "qps_per_chip":
             best = opt.best_qps_per_chip(plans)
@@ -88,7 +117,10 @@ class ServingPlan:
             best = opt.best_ttft(plans)
         else:
             raise ValueError(f"unknown objective {objective!r}")
-        return cls.from_plan_point(schema, best, **engine_overrides)
+        plan = cls.from_plan_point(schema, best, **engine_overrides)
+        if calibration:
+            plan.detail["calibration"] = calibration
+        return plan
 
     # ---------------- deployment -------------------------------------------
 

@@ -159,8 +159,6 @@ class FallbackBackend:
     and ``retrieval_blackout`` before every level, so CI can exercise the
     whole ladder deterministically with real backends underneath."""
 
-    name = "fallback"
-
     def __init__(self, chain: list[RetrievalBackend], injector=None):
         if not chain:
             raise ValueError("fallback chain needs at least one backend")
@@ -168,6 +166,13 @@ class FallbackBackend:
         self.injector = injector
         self.metrics = {"fallbacks": 0, "no_context": 0}
         self.last_level: int = 0
+
+    @property
+    def name(self) -> str:
+        """The primary's name: the chain is a robustness wrapper (bit
+        transparent without faults), not a different backend -- callers
+        asking which backend was deployed should see the primary."""
+        return self.chain[0].name
 
     def _injected(self) -> str | None:
         """One deterministic fault decision per search call: blackout

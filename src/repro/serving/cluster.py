@@ -51,13 +51,28 @@ state (DONE / EXPIRED / FAILED) under any fault schedule**, with greedy
 decode making a recovered request's tokens bit-identical to an unfaulted
 run (retry parity).
 
+Live resize (``repro.serving.controller`` drives it; the primitives live
+here): engine groups are mutable at runtime.  :meth:`add_prefill_engine` /
+:meth:`add_decode_engine` attach a new engine under a stable per-group id;
+:meth:`drain_engine` parks one in ``EngineHealth.DRAINING`` -- it stops
+receiving new dispatch while the health sweep migrates its in-flight
+requests via the same re-prefill path fault recovery uses (counted in
+``Request.migrations``, NOT against the bounded fault-retry budget, so a
+resize can never drop a request by exhausting retries) -- and the sweep
+reaps fully drained engines out of their group (``retired``).  Brownout
+shedding is the only pressure valve mid-resize.  If a crash races a
+resize and a group's last alive engines are all DRAINING, their drains
+are aborted (``undrain`` -> DEGRADED) instead of failing queued work.
+
 Requests are driven through the same open-loop front-end as the single
 engine: ``RAGServer(cluster)`` (or ``RAGServer.from_plan(...,
 topology="disagg")``) gives submission, streaming, deadlines and trace
 replay on top of this class.  Tail latency is first-class:
 :meth:`group_summary` reports p50/p95/p99 TTFT per prefill engine and
 p50/p95/p99 TPOT per decode engine, plus handoff traffic, shed counts,
-per-engine health and the fault-layer counters.
+per-engine health and the fault-layer counters -- lifetime by default, or
+over a rolling window (``window_s=``) so a controller sees the current
+regime instead of the whole run.
 """
 
 from __future__ import annotations
@@ -69,7 +84,7 @@ import numpy as np
 
 from repro.core.stage_registry import REGISTRY
 from repro.serving.engine import RAGEngine
-from repro.serving.faults import (EngineCrash, FaultInjector,
+from repro.serving.faults import (EngineCrash, EngineHealth, FaultInjector,
                                   TransientStageError)
 from repro.serving.kv_cache import payload_checksum, payload_nbytes
 from repro.serving.request import Request, State
@@ -102,8 +117,6 @@ class RAGCluster:
         * headroom`` are shed lowest-urgency-first (None disables)."""
         if not prefill_engines or not decode_engines:
             raise ValueError("need at least one engine per group")
-        self.prefill_engines = list(prefill_engines)
-        self.decode_engines = list(decode_engines)
         self.predicted_ttft = predicted_ttft
         self.injector = injector
         self.max_retries = max_retries
@@ -114,9 +127,19 @@ class RAGCluster:
         self.handoff: list[tuple] = []
         self.retrying: list[Request] = []     # fault-recovery backoff pool
         self._seq = 0                         # FIFO tiebreak for EDF
-        self._prefill_load = [0] * len(self.prefill_engines)
         self.requests: list[Request] = []
-        # rid -> engine index of the request's LATEST pass through the
+        # engine groups are mutable at runtime (live resize): each engine
+        # gets a stable per-group integer id at attach time (ids are never
+        # reused), kept in a list parallel to the engine list, so every
+        # bookkeeping map below survives engines joining or leaving
+        self.prefill_engines: list[RAGEngine] = []
+        self.decode_engines: list[RAGEngine] = []
+        self._prefill_ids: list[int] = []
+        self._decode_ids: list[int] = []
+        self._next_eid = {"prefill": 0, "decode": 0}
+        self.retired: list[tuple] = []        # (group, eid, engine)
+        self._prefill_load: dict[int, int] = {}   # eid -> prompt tokens
+        # rid -> engine id of the request's LATEST pass through the
         # group (deliberately overwritten on retry: the group summary
         # attributes the request to the engine that actually served it);
         # *_history keeps every pass for per-engine failure accounting
@@ -124,7 +147,7 @@ class RAGCluster:
         self.decode_of: dict[int, int] = {}
         self.prefill_history: dict[int, list[int]] = {}
         self.decode_history: dict[int, list[int]] = {}
-        self._dead_seen: set = set()          # (group, idx) counted once
+        self._dead_seen: set = set()          # (group, eid) counted once
         self.metrics = {"shed_requests": 0, "expired_queued": 0,
                         "expired_in_handoff": 0, "expired_retrying": 0,
                         "handoffs": 0,
@@ -141,10 +164,14 @@ class RAGCluster:
                         "retries_exhausted": 0, "handoff_corrupt": 0,
                         "handoff_dropped": 0, "stage_errors": 0,
                         "brownout_shed": 0, "failed_no_capacity": 0,
-                        "aborted": 0}
-        if injector is not None:
-            for eng in self.prefill_engines + self.decode_engines:
-                eng.set_injector(injector)
+                        "aborted": 0,
+                        # live resize
+                        "requests_migrated": 0, "engines_added": 0,
+                        "engines_removed": 0, "drains_aborted": 0}
+        for eng in prefill_engines:
+            self._attach("prefill", eng)
+        for eng in decode_engines:
+            self._attach("decode", eng)
 
     # ---------------- construction -----------------------------------------
 
@@ -207,6 +234,86 @@ class RAGCluster:
             return
         self.queue.append(req)
 
+    # ---------------- engine groups (live resize) ---------------------------
+
+    def _attach(self, group: str, eng: RAGEngine) -> int:
+        """Attach one engine to a group under a fresh stable id (ids are
+        per-group and never reused, so bookkeeping keyed by id survives
+        any add/remove sequence)."""
+        eid = self._next_eid[group]
+        self._next_eid[group] = eid + 1
+        if group == "prefill":
+            self.prefill_engines.append(eng)
+            self._prefill_ids.append(eid)
+            self._prefill_load[eid] = 0
+        else:
+            self.decode_engines.append(eng)
+            self._decode_ids.append(eid)
+        if self.injector is not None:
+            eng.set_injector(self.injector)
+        return eid
+
+    def add_prefill_engine(self, eng: RAGEngine) -> int:
+        """Grow the prefill group at runtime; returns the engine's stable
+        id.  The engine must share the cluster's corpus encode/backend
+        family (same contract as construction)."""
+        self.metrics["engines_added"] += 1
+        return self._attach("prefill", eng)
+
+    def add_decode_engine(self, eng: RAGEngine) -> int:
+        """Grow the decode group at runtime; returns the engine's stable
+        id."""
+        self.metrics["engines_added"] += 1
+        return self._attach("decode", eng)
+
+    def engine_id(self, eng: RAGEngine) -> tuple[str, int]:
+        """(group, stable id) of an attached engine."""
+        for group, engines, ids in (
+                ("prefill", self.prefill_engines, self._prefill_ids),
+                ("decode", self.decode_engines, self._decode_ids)):
+            for eid, e in zip(ids, engines):
+                if e is eng:
+                    return group, eid
+        raise ValueError("engine is not attached to this cluster")
+
+    def drain_engine(self, eng: RAGEngine, *, force: bool = False) -> None:
+        """Start a zero-drop removal: the engine goes DRAINING (no new
+        dispatch), the next health sweep migrates its in-flight requests
+        via the re-prefill path, and once empty it is reaped out of its
+        group.  Refuses to drain the last accepting engine of a group
+        (the group would go unservable) unless ``force=True``."""
+        group, _eid = self.engine_id(eng)
+        engines = (self.prefill_engines if group == "prefill"
+                   else self.decode_engines)
+        others = [e for e in engines if e is not eng and e.accepting]
+        if not others and not force:
+            raise ValueError(
+                f"refusing to drain the last accepting {group} engine "
+                f"(force=True overrides)")
+        eng.drain()
+
+    def _reap_drained(self) -> None:
+        """Remove fully drained engines from their groups.  A DRAINING
+        engine with no in-flight state (its migrated requests re-enter
+        through the admission queue, never back onto it) is detached and
+        recorded in ``retired``; its id stays valid in the bookkeeping
+        maps, so history attribution survives the removal."""
+        for group, engines, ids in (
+                ("prefill", self.prefill_engines, self._prefill_ids),
+                ("decode", self.decode_engines, self._decode_ids)):
+            keep_e, keep_i = [], []
+            for eid, eng in zip(ids, engines):
+                if (eng.health is EngineHealth.DRAINING
+                        and not eng.active and not eng.prefilling
+                        and not eng.pending_retrievals):
+                    self.retired.append((group, eid, eng))
+                    self.metrics["engines_removed"] += 1
+                else:
+                    keep_e.append(eng)
+                    keep_i.append(eid)
+            engines[:] = keep_e
+            ids[:] = keep_i
+
     # ---------------- fault detection / recovery ---------------------------
 
     def _note_dead(self, group: str, idx: int) -> None:
@@ -215,11 +322,18 @@ class RAGCluster:
             self.metrics["engine_failures"] += 1
 
     def _schedule_retry(self, req: Request, reason: str,
-                        now: float | None = None) -> None:
+                        now: float | None = None, *,
+                        migration: bool = False) -> None:
         """Recover one in-flight request: back into the pipeline via
         re-prefill after an exponential backoff, unless its deadline
         passed or its retry budget is spent (then EXPIRED / FAILED --
-        still exactly one terminal state)."""
+        still exactly one terminal state).
+
+        ``migration=True`` is the live-resize path (a drain evicting
+        healthy work): no retry budget is charged or checked and the
+        backoff is zero -- an operator resize must never be able to fail
+        a request, so migration can only delay, not drop (the zero-drop
+        invariant)."""
         if req.done:
             return
         now = time.monotonic() if now is None else now
@@ -228,15 +342,18 @@ class RAGCluster:
             req.t_done = now
             self.metrics["expired_retrying"] += 1
             return
-        if req.retries >= self.max_retries:
+        if not migration and req.retries >= self.max_retries:
             req.state = State.FAILED
             req.fail_reason = f"retry budget exhausted ({reason})"
             req.t_done = now
             self.metrics["retries_exhausted"] += 1
             return
-        req.reset_for_retry(now, self.retry_backoff * (2 ** req.retries))
+        backoff = (0.0 if migration
+                   else self.retry_backoff * (2 ** req.retries))
+        req.reset_for_retry(now, backoff, migration=migration)
         req.fail_reason = None
-        self.metrics["requests_retried"] += 1
+        key = "requests_migrated" if migration else "requests_retried"
+        self.metrics[key] += 1
         self.retrying.append(req)
 
     def _requeue_retries(self, now: float) -> None:
@@ -250,34 +367,56 @@ class RAGCluster:
             req.state = State.QUEUED
             self.queue.append(req)
 
-    def _drain_dead_decode(self, idx: int, now: float) -> None:
-        """Recover every request holding state on a dead decode engine:
-        slots are released (page refcounts return to idle -- the
-        bookkeeping is host-side and survives the simulated crash) and
-        the requests re-enter the pipeline via re-prefill."""
-        eng = self.decode_engines[idx]
-        self._note_dead("decode", idx)
+    def _evacuate_decode(self, eid: int, eng: RAGEngine, now: float, *,
+                         migration: bool = False) -> None:
+        """Recover every request holding state on a decode engine that can
+        no longer serve it: slots are released (page refcounts return to
+        idle -- the bookkeeping is host-side and survives a simulated
+        crash) and the requests re-enter the pipeline via re-prefill.
+        Two callers: a DEAD engine (fault path, charges the retry budget)
+        and a DRAINING one (live resize, ``migration=True`` -- budget-free
+        and backoff-free)."""
+        if not migration:
+            self._note_dead("decode", eid)
+        reason = (f"decode engine {eid} draining" if migration
+                  else f"decode engine {eid} died")
         for slot, req in list(eng.active.items()):
             eng.active.pop(slot)
             eng.prefilling.pop(slot, None)
             eng.pool.release(slot)
-            self._schedule_retry(req, f"decode engine {idx} died", now)
+            self._schedule_retry(req, reason, now, migration=migration)
         eng.pending_retrievals.clear()
 
     def _health_sweep(self, now: float) -> None:
-        """Step-phase health check: drain requests stranded on dead
-        decode engines, and fail fast when a whole group is gone (no
+        """Step-phase health check: evacuate requests stranded on dead
+        decode engines (retry path) and on DRAINING ones (migration
+        path), abort drains that would leave a group with no accepting
+        engine (a crash racing a resize), reap fully drained engines out
+        of their groups, and fail fast when a whole group is gone (no
         healthy engine can ever serve them -- parking the requests
         forever would break the one-terminal-state invariant)."""
-        for idx, eng in enumerate(self.decode_engines):
+        for eid, eng in zip(self._decode_ids, self.decode_engines):
             if not eng.healthy:
                 if eng.active or eng.pending_retrievals:
-                    self._drain_dead_decode(idx, now)
+                    self._evacuate_decode(eid, eng, now)
                 else:
-                    self._note_dead("decode", idx)
-        for idx, eng in enumerate(self.prefill_engines):
+                    self._note_dead("decode", eid)
+            elif (eng.health is EngineHealth.DRAINING
+                    and (eng.active or eng.pending_retrievals)):
+                self._evacuate_decode(eid, eng, now, migration=True)
+        for eid, eng in zip(self._prefill_ids, self.prefill_engines):
             if not eng.healthy:
-                self._note_dead("prefill", idx)
+                self._note_dead("prefill", eid)
+        # resize racing a crash: never let a drain leave a group
+        # unservable -- abort the drain (DRAINING -> DEGRADED) instead of
+        # failing queued work
+        for engines in (self.prefill_engines, self.decode_engines):
+            if engines and not any(e.accepting for e in engines):
+                for eng in engines:
+                    if eng.health is EngineHealth.DRAINING:
+                        eng.undrain()
+                        self.metrics["drains_aborted"] += 1
+        self._reap_drained()
         no_prefill = not any(e.healthy for e in self.prefill_engines)
         no_decode = not any(e.healthy for e in self.decode_engines)
         if no_prefill or no_decode:
@@ -296,18 +435,20 @@ class RAGCluster:
                 self.metrics["failed_no_capacity"] += 1
 
     def _brownout(self, now: float) -> None:
-        """Graceful degradation under lost capacity: once any engine is
-        dead, queued requests beyond ``healthy decode slots * headroom``
-        are shed lowest-urgency-first (no deadline sheds before latest
-        deadline) so the survivors' tail SLOs stay defensible instead of
-        everything timing out together."""
+        """Graceful degradation under lost capacity: once any engine has
+        stopped accepting work (dead, or draining mid-resize), queued
+        requests beyond ``accepting decode slots * headroom`` are shed
+        lowest-urgency-first (no deadline sheds before latest deadline)
+        so the survivors' tail SLOs stay defensible instead of everything
+        timing out together.  This is the only pressure valve during a
+        live resize."""
         if self.brownout_headroom is None:
             return
         engines = self.prefill_engines + self.decode_engines
-        if all(e.healthy for e in engines):
+        if all(e.accepting for e in engines):
             return
         cap = sum(e.cfg.decode_slots
-                  for e in self.decode_engines if e.healthy)
+                  for e in self.decode_engines if e.accepting)
         limit = int(cap * self.brownout_headroom)
         excess = len(self.queue) - limit
         if excess <= 0:
@@ -386,28 +527,27 @@ class RAGCluster:
                 still.append(req)
         self.retrying[:] = still
 
-    def _run_prefill(self, idx: int, req: Request) -> None:
-        """Full prefill-group pass on engine ``idx``: executors, prompt
+    def _run_prefill(self, eid: int, eng: RAGEngine, req: Request) -> None:
+        """Full prefill-group pass on engine ``eid``: executors, prompt
         assembly, bucketed prefill, then KV export + slot release.  The
         request leaves in ``HANDOFF`` carrying its exported cache prefix
         and its checksum.  The staging slot is released on EVERY path
         (``finally``), so an exception can never leak it; the caller
         (:meth:`_dispatch_prefill`) classifies the failure and recovers
         the request."""
-        eng = self.prefill_engines[idx]
         inj = self.injector
-        if inj is not None and inj.fire("stage_error", engine=idx,
+        if inj is not None and inj.fire("stage_error", engine=eid,
                                         rid=req.rid):
             raise TransientStageError(
-                f"injected stage error on prefill engine {idx}")
+                f"injected stage error on prefill engine {eid}")
         for ex in eng.executors:
             with eng._timed(ex.name):
                 ex.run(eng, req)
         req.prompt = eng._assemble_prompt(req)
-        if inj is not None and inj.fire("prefill_crash", engine=idx,
+        if inj is not None and inj.fire("prefill_crash", engine=eid,
                                         rid=req.rid):
             eng.fail("injected prefill crash")
-            raise EngineCrash(f"prefill engine {idx} crashed mid-request")
+            raise EngineCrash(f"prefill engine {eid} crashed mid-request")
         slot = eng.pool.alloc(req.rid)
         try:
             with eng._timed("prefill"):
@@ -420,14 +560,14 @@ class RAGCluster:
         checksum = payload_checksum(kv)
         full_bytes = payload_nbytes(kv)
         if inj is not None:
-            if inj.fire("handoff_drop", engine=idx, rid=req.rid):
+            if inj.fire("handoff_drop", engine=eid, rid=req.rid):
                 kv = None                      # lost "on the wire"
-            elif inj.fire("handoff_corrupt", engine=idx, rid=req.rid):
+            elif inj.fire("handoff_corrupt", engine=eid, rid=req.rid):
                 kv = inj.corrupt(kv)
         req.state = State.HANDOFF
-        self.prefill_history.setdefault(req.rid, []).append(idx)
-        self.prefill_of[req.rid] = idx
-        self._prefill_load[idx] += len(req.prompt)
+        self.prefill_history.setdefault(req.rid, []).append(eid)
+        self.prefill_of[req.rid] = eid
+        self._prefill_load[eid] += len(req.prompt)
         self.metrics["handoffs"] += 1
         # full payload accounted here; what actually ships is known only
         # at import time (the destination may already cache some pages)
@@ -436,30 +576,32 @@ class RAGCluster:
         self._seq += 1
 
     def _dispatch_prefill(self) -> None:
-        """Least-loaded dispatch over the HEALTHY prefill engines: at most
-        one queued request per engine per step (load = cumulative prompt
-        tokens processed), so a burst saturates the whole group instead
-        of head-of-line blocking one engine.  A failure during the pass
-        never wedges the cluster: the engine is marked (DEAD for a crash,
-        DEGRADED for a transient error) and the request recovers through
-        the retry path."""
+        """Least-loaded dispatch over the ACCEPTING prefill engines
+        (HEALTHY/DEGRADED -- a DRAINING engine sheds work, never gains
+        it): at most one queued request per engine per step (load =
+        cumulative prompt tokens processed), so a burst saturates the
+        whole group instead of head-of-line blocking one engine.  A
+        failure during the pass never wedges the cluster: the engine is
+        marked (DEAD for a crash, DEGRADED for a transient error) and the
+        request recovers through the retry path."""
         used: set[int] = set()
         while self.queue:
-            healthy = [i for i, e in enumerate(self.prefill_engines)
-                       if e.healthy and i not in used]
-            if not healthy:
+            ready = [(eid, e) for eid, e in zip(self._prefill_ids,
+                                                self.prefill_engines)
+                     if e.accepting and eid not in used]
+            if not ready:
                 break
-            idx = min(healthy, key=lambda i: self._prefill_load[i])
-            used.add(idx)
+            eid, eng = min(ready, key=lambda t: self._prefill_load[t[0]])
+            used.add(eid)
             req = self.queue.pop(0)
             try:
-                self._run_prefill(idx, req)
+                self._run_prefill(eid, eng, req)
             except EngineCrash:
-                self.prefill_engines[idx].fail("crashed mid-prefill")
-                self._note_dead("prefill", idx)
-                self._schedule_retry(req, f"prefill engine {idx} died")
+                eng.fail("crashed mid-prefill")
+                self._note_dead("prefill", eid)
+                self._schedule_retry(req, f"prefill engine {eid} died")
             except Exception as e:      # transient stage error or a bug
-                self.prefill_engines[idx].degrade()
+                eng.degrade()
                 self.metrics["stage_errors"] += 1
                 self._schedule_retry(req, f"stage error: {e!r}")
 
@@ -482,14 +624,13 @@ class RAGCluster:
                 self.metrics["handoff_dropped"] += 1
                 self._schedule_retry(req, "handoff payload dropped", now)
                 continue
-            healthy = [i for i, e in enumerate(self.decode_engines)
-                       if e.healthy]
-            if not healthy:
+            ready = [(eid, e) for eid, e in zip(self._decode_ids,
+                                                self.decode_engines)
+                     if e.accepting]
+            if not ready:
                 waiting.append(item)           # health sweep will fail them
                 continue
-            idx = max(healthy,
-                      key=lambda i: len(self.decode_engines[i].pool.free))
-            eng = self.decode_engines[idx]
+            eid, eng = max(ready, key=lambda t: len(t[1].pool.free))
             if not eng.pool.free:
                 waiting.append(item)        # every healthy engine is full
                 continue
@@ -513,8 +654,8 @@ class RAGCluster:
             req.t_decode = time.monotonic()
             req.state = State.DECODE
             eng.active[slot] = req
-            self.decode_history.setdefault(req.rid, []).append(idx)
-            self.decode_of[req.rid] = idx
+            self.decode_history.setdefault(req.rid, []).append(eid)
+            self.decode_of[req.rid] = eid
         self.handoff[:] = waiting
 
     def _decode_tick(self) -> None:
@@ -522,15 +663,15 @@ class RAGCluster:
         retrieval dispatch + fused decode step).  An injected or detected
         crash drains the engine's requests back into the pipeline in the
         same step."""
-        for idx, eng in enumerate(self.decode_engines):
+        for eid, eng in zip(self._decode_ids, self.decode_engines):
             if not eng.healthy:
                 continue
             if not (eng.active or eng.pending_retrievals):
                 continue
             if self.injector is not None and self.injector.fire(
-                    "decode_crash", engine=idx):
+                    "decode_crash", engine=eid):
                 eng.fail("injected decode crash")
-                self._drain_dead_decode(idx, time.monotonic())
+                self._evacuate_decode(eid, eng, time.monotonic())
                 continue
             try:
                 eng._dispatch_iterative(
@@ -539,7 +680,7 @@ class RAGCluster:
                 eng._decode_step()
             except EngineCrash:
                 eng.fail("crashed mid-decode")
-                self._drain_dead_decode(idx, time.monotonic())
+                self._evacuate_decode(eid, eng, time.monotonic())
 
     # ---------------- driving ----------------------------------------------
 
@@ -574,7 +715,8 @@ class RAGCluster:
 
     # ---------------- tail-latency accounting ------------------------------
 
-    def group_summary(self) -> dict:
+    def group_summary(self, *, window_s: float | None = None,
+                      now: float | None = None) -> dict:
         """Per-group and per-engine tail latency: TTFT is the prefill
         group's product (arrival -> first token, wherever the request
         later decoded), TPOT the decode group's -- measured from
@@ -584,56 +726,85 @@ class RAGCluster:
         engine that served its final pass (``prefill_of``/``decode_of``);
         ``*_history`` in this summary counts every pass, so failed
         attempts stay visible per engine.  ``health`` reports each
-        engine's HEALTHY/DEGRADED/DEAD state."""
-        by_prefill: dict[int, list] = {i: [] for i
-                                       in range(len(self.prefill_engines))}
-        by_decode: dict[int, list] = {i: [] for i
-                                      in range(len(self.decode_engines))}
+        engine's HEALTHY/DEGRADED/DRAINING/DEAD state, ``depths`` the
+        scheduler queue occupancy (the controller's backlog signal).
+
+        ``window_s`` restricts the latency samples to a rolling window
+        ending at ``now`` (engine clock; defaults to the current time):
+        TTFT samples by when the first token landed, TPOT samples by when
+        the request finished -- so a controller sees the current regime's
+        tails, not the run's lifetime aggregate.  Counters in
+        ``scheduler`` stay lifetime (they are monotone; window by
+        differencing snapshots).  Samples attributed to retired engines
+        stay in the group aggregate but have no per-engine row."""
+        now = time.monotonic() if now is None else now
+        cutoff = None if window_s is None else now - window_s
+        by_prefill: dict[int, list] = {eid: [] for eid in self._prefill_ids}
+        by_decode: dict[int, list] = {eid: [] for eid in self._decode_ids}
+        all_ttft, all_tpot = [], []
         for req in self.requests:
-            if req.ttft is not None and req.rid in self.prefill_of:
-                by_prefill[self.prefill_of[req.rid]].append(req.ttft)
+            if (req.ttft is not None and req.rid in self.prefill_of
+                    and (cutoff is None or req.t_first_token >= cutoff)):
+                all_ttft.append(req.ttft)
+                eid = self.prefill_of[req.rid]
+                if eid in by_prefill:
+                    by_prefill[eid].append(req.ttft)
             if (req.state is State.DONE and req.t_decode is not None
-                    and len(req.output) > 1 and req.rid in self.decode_of):
-                by_decode[self.decode_of[req.rid]].append(
-                    (req.t_done - req.t_decode) / (len(req.output) - 1))
-        all_ttft = [t for v in by_prefill.values() for t in v]
-        all_tpot = [t for v in by_decode.values() for t in v]
-        passes_p = [0] * len(self.prefill_engines)
+                    and len(req.output) > 1 and req.rid in self.decode_of
+                    and (cutoff is None or req.t_done >= cutoff)):
+                tpot = (req.t_done - req.t_decode) / (len(req.output) - 1)
+                all_tpot.append(tpot)
+                eid = self.decode_of[req.rid]
+                if eid in by_decode:
+                    by_decode[eid].append(tpot)
+        passes_p = {eid: 0 for eid in self._prefill_ids}
         for rids in self.prefill_history.values():
             for i in rids:
-                passes_p[i] += 1
-        passes_d = [0] * len(self.decode_engines)
+                if i in passes_p:
+                    passes_p[i] += 1
+        passes_d = {eid: 0 for eid in self._decode_ids}
         for rids in self.decode_history.values():
             for i in rids:
-                passes_d[i] += 1
+                if i in passes_d:
+                    passes_d[i] += 1
         scheduler = dict(self.metrics)
+        live = self.prefill_engines + self.decode_engines
+        every = live + [e for _g, _eid, e in self.retired]
         scheduler["degraded_answers"] = sum(
-            e.metrics["degraded_answers"]
-            for e in self.prefill_engines + self.decode_engines)
-        backends = {id(e.backend): e.backend
-                    for e in self.prefill_engines + self.decode_engines
+            e.metrics["degraded_answers"] for e in every)
+        backends = {id(e.backend): e.backend for e in every
                     if hasattr(e.backend, "metrics")}
         scheduler["retrieval_fallbacks"] = sum(
             b.metrics.get("fallbacks", 0) for b in backends.values())
         scheduler["retrieval_no_context"] = sum(
             b.metrics.get("no_context", 0) for b in backends.values())
         return {
+            "window_s": window_s,
             "prefill": {
                 "n_engines": len(self.prefill_engines),
+                "ids": list(self._prefill_ids),
                 "ttft_s": percentiles(all_ttft),
                 "per_engine": [
-                    {"n": len(by_prefill[i]), "passes": passes_p[i],
-                     "ttft_s": percentiles(by_prefill[i])}
-                    for i in range(len(self.prefill_engines))],
+                    {"eid": eid, "n": len(by_prefill[eid]),
+                     "passes": passes_p[eid],
+                     "ttft_s": percentiles(by_prefill[eid])}
+                    for eid in self._prefill_ids],
             },
             "decode": {
                 "n_engines": len(self.decode_engines),
+                "ids": list(self._decode_ids),
                 "tpot_s": percentiles(all_tpot),
                 "per_engine": [
-                    {"n": len(by_decode[i]), "passes": passes_d[i],
-                     "tpot_s": percentiles(by_decode[i])}
-                    for i in range(len(self.decode_engines))],
+                    {"eid": eid, "n": len(by_decode[eid]),
+                     "passes": passes_d[eid],
+                     "tpot_s": percentiles(by_decode[eid])}
+                    for eid in self._decode_ids],
             },
+            "depths": {"queue": len(self.queue),
+                       "handoff": len(self.handoff),
+                       "retrying": len(self.retrying)},
+            "retired": [{"group": g, "eid": eid}
+                        for g, eid, _e in self.retired],
             "health": {
                 "prefill": [e.health.value for e in self.prefill_engines],
                 "decode": [e.health.value for e in self.decode_engines],
@@ -644,7 +815,8 @@ class RAGCluster:
     def describe(self) -> str:
         m = self.metrics
         return (f"RAGCluster[{len(self.prefill_engines)} prefill + "
-                f"{len(self.decode_engines)} decode engines, "
+                f"{len(self.decode_engines)} decode engines "
+                f"(+{m['engines_added']}/-{m['engines_removed']} resized), "
                 f"{m['handoffs']} handoffs "
                 f"({m['handoff_bytes'] / 1e6:.2f} MB shipped of "
                 f"{m['handoff_bytes_full'] / 1e6:.2f} MB, "
@@ -652,4 +824,5 @@ class RAGCluster:
                 f"shed {m['shed_requests']}, "
                 f"expired {m['expired_queued']}+{m['expired_in_handoff']}, "
                 f"failures {m['engine_failures']}, "
-                f"retried {m['requests_retried']}]")
+                f"retried {m['requests_retried']}, "
+                f"migrated {m['requests_migrated']}]")

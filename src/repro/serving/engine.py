@@ -210,7 +210,8 @@ class RAGEngine:
         self.prefilling: dict[int, int] = {}     # slot -> prompt cursor
         self.pending_retrievals: list[Request] = []
         self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
-                        "retrieval_batches": 0, "prefills": 0,
+                        "retrieval_batches": 0, "retrieved_queries": 0,
+                        "prefills": 0,
                         "prefill_compiles": 0, "append_compiles": 0,
                         "host_syncs": 0, "decode_host_syncs": 0,
                         "cache_copy_bytes": 0, "capacity_stops": 0,
@@ -259,7 +260,17 @@ class RAGEngine:
 
     @property
     def healthy(self) -> bool:
+        """Alive (not DEAD).  A DRAINING engine is still alive -- it can
+        finish ticking and can even be un-drained -- but it must not
+        receive new work: dispatch paths check :attr:`accepting`."""
         return self.health is not EngineHealth.DEAD
+
+    @property
+    def accepting(self) -> bool:
+        """Eligible for NEW dispatch (HEALTHY or DEGRADED).  DRAINING and
+        DEAD engines are excluded: the live-resize contract is that a
+        draining engine only sheds work, never gains it."""
+        return self.health in (EngineHealth.HEALTHY, EngineHealth.DEGRADED)
 
     def fail(self, reason: str = "injected") -> None:
         """Declare this engine dead (crash injection or a real health
@@ -272,6 +283,29 @@ class RAGEngine:
     def degrade(self) -> None:
         """Record a survived transient fault (still serving)."""
         if self.health is EngineHealth.HEALTHY:
+            self.health = EngineHealth.DEGRADED
+
+    def drain(self) -> None:
+        """Park this engine in DRAINING (live resize): it stops accepting
+        new work and the cluster's health sweep migrates its in-flight
+        requests via the re-prefill path.  Idempotent while already
+        draining; raises on a DEAD engine (the legal-transition graph
+        ``faults.LEGAL_HEALTH_TRANSITIONS`` has no DEAD -> DRAINING
+        edge -- dead engines are *recovered from*, not drained)."""
+        if self.health is EngineHealth.DRAINING:
+            return
+        if self.health is EngineHealth.DEAD:
+            raise EngineCrash(
+                f"cannot drain a dead engine ({self.fail_reason})")
+        self.health = EngineHealth.DRAINING
+
+    def undrain(self) -> None:
+        """Abort a drain: the engine re-enters service as DEGRADED (the
+        only legal DRAINING exit besides DEAD).  The cluster uses this
+        instead of failing queued work when a resize races a crash and
+        the draining engine is the last alive member of its group.
+        No-op unless currently DRAINING."""
+        if self.health is EngineHealth.DRAINING:
             self.health = EngineHealth.DEGRADED
 
     def check_alive(self) -> None:
@@ -385,6 +419,10 @@ class RAGEngine:
             qv = self._embed_batched(queries)
         with self._timed("retrieve"):
             _, idx = self.backend.search(qv, k)
+        # queries actually scanned: with bytes_per_query this turns
+        # stage_time_s['retrieve'] into a measured scan bandwidth for
+        # core/retrieval_model.calibrate_host (the controller's re-plan)
+        self.metrics["retrieved_queries"] += len(queries)
         # did the fallback chain bottom out (no-context) on this call?
         self._retrieval_degraded = \
             getattr(self.backend, "last_level", 0) == -1

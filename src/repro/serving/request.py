@@ -107,6 +107,7 @@ class Request:
     retrievals_done: int = 0
     # fault recovery
     retries: int = 0                      # recovery attempts so far
+    migrations: int = 0                   # drain-induced re-prefills (resize)
     t_retry: float | None = None          # backoff expiry (engine clock)
     degraded: bool = False                # served without full retrieval
     fail_reason: str | None = None        # why FAILED, for reports
@@ -143,14 +144,24 @@ class Request:
             return None
         return self.t_done - self.t_arrive
 
-    def reset_for_retry(self, now: float, backoff: float) -> None:
+    def reset_for_retry(self, now: float, backoff: float, *,
+                        migration: bool = False) -> None:
         """Clear every per-attempt field so the retry re-runs the full
         pipeline from admission.  Greedy decode + deterministic stages
         mean the recovered request's tokens are bit-identical to an
         unfaulted run (the retry-parity guarantee); only the latency
         timestamps keep history (``t_arrive`` is the original arrival, so
-        TTFT honestly includes the recovery delay)."""
-        self.retries += 1
+        TTFT honestly includes the recovery delay).
+
+        ``migration=True`` marks a drain-induced move (live resize): the
+        request was healthy work evicted by an operator decision, so it
+        is counted in ``migrations`` and does NOT consume the bounded
+        fault-retry budget -- a resize must never be able to fail a
+        request by exhausting its retries (the zero-drop invariant)."""
+        if migration:
+            self.migrations += 1
+        else:
+            self.retries += 1
         self.t_retry = now + backoff
         self.state = State.RETRYING
         self.rewritten = None

@@ -149,6 +149,16 @@ class RAGServer:
         self.engine = None if self.cluster is not None else engine
         self.handles: dict[int, RequestHandle] = {}
         self._live: list[RequestHandle] = []
+        self._step_hooks: list[Callable[["RAGServer"], None]] = []
+
+    def add_step_hook(self, fn: Callable[["RAGServer"], None]) -> None:
+        """Register a callback fired after every :meth:`step` (idle steps
+        included).  This is the control-plane attachment point: a
+        :class:`~repro.serving.controller.ClusterController` hooks here to
+        sample telemetry and drive drift detection / resizes in-band with
+        the serving loop.  Hooks must be cheap -- they run on every tick
+        -- and should rate-limit themselves by wall clock."""
+        self._step_hooks.append(fn)
 
     @property
     def cfg(self):
@@ -265,15 +275,22 @@ class RAGServer:
         if self.cluster is not None:
             more = self.cluster.step()
             self._deliver()
+            self._fire_step_hooks()
             return more
         eng = self.engine
         self._expire()
         if not (eng.queue or eng.active):
             self._deliver()
+            self._fire_step_hooks()
             return False
         eng.tick()
         self._deliver()
+        self._fire_step_hooks()
         return bool(eng.queue or eng.active)
+
+    def _fire_step_hooks(self) -> None:
+        for fn in self._step_hooks:
+            fn(self)
 
     def _busy(self) -> bool:
         if self.cluster is not None:
@@ -387,22 +404,48 @@ class RAGServer:
 
     # ---------------- reporting --------------------------------------------
 
-    def summary(self) -> dict:
+    def summary(self, *, window_s: float | None = None,
+                now: float | None = None) -> dict:
         """Aggregate serving stats over everything submitted so far: means
         plus the p50/p95/p99 tail (RAGPulse: only tail latency under real
-        traffic validates a plan)."""
+        traffic validates a plan).
+
+        ``window_s`` restricts the sample to a rolling window ending at
+        ``now`` (engine clock; defaults to the current time) -- the form
+        a live controller consumes: arrivals counted by ``t_arrive``
+        (giving ``offered_qps``, the *offered* load, shed or not),
+        completions and TPOT by ``t_done``, TTFT samples by when the
+        first token actually landed (``t_first_token``), so a regime
+        shift shows up in the window as soon as it happens rather than
+        being diluted by the whole run's history."""
+        now = time.monotonic() if now is None else now
+        cutoff = None if window_s is None else now - window_s
+
+        def in_win(t):
+            return t is not None and (cutoff is None or t >= cutoff)
+
         reqs = [h.request for h in self.handles.values()]
-        done = [r for r in reqs if r.state is State.DONE]
-        ttfts = [r.ttft for r in done if r.ttft is not None]
+        arrived = [r for r in reqs if cutoff is None or r.t_arrive >= cutoff]
+        done = [r for r in reqs if r.state is State.DONE and in_win(r.t_done)]
+        ttfts = [r.ttft for r in reqs
+                 if r.ttft is not None and in_win(r.t_first_token)]
         tpots = [(r.latency - r.ttft) / (len(r.output) - 1)
                  for r in done if r.ttft is not None and len(r.output) > 1]
-        span = (max((r.t_done for r in done), default=0.0)
-                - min((r.t_arrive for r in reqs), default=0.0))
+        if cutoff is None:
+            span = (max((r.t_done for r in done), default=0.0)
+                    - min((r.t_arrive for r in reqs), default=0.0))
+            offered_span = span
+        else:
+            span = offered_span = window_s
         out = {
             "n_submitted": len(reqs),
+            "n_arrived": len(arrived),
             "n_done": len(done),
             "n_expired": self.n_expired,
+            "window_s": window_s,
             "qps": len(done) / span if span > 0 else 0.0,
+            "offered_qps": (len(arrived) / offered_span
+                            if offered_span > 0 else 0.0),
             "ttft_s": float(np.mean(ttfts)) if ttfts else None,
             "tpot_s": float(np.mean(tpots)) if tpots else None,
         }

@@ -1,0 +1,490 @@
+"""Live control plane: drift detection, calibrated re-planning, and
+zero-drop cluster resize.
+
+Fast tier: the engine-health transition graph (DRAINING lifecycle and
+its enforcement in ``RAGEngine.drain/undrain/fail``), DriftDetector
+hysteresis semantics over synthetic telemetry, and the RAGPulse-shaped
+trace generator's statistical/structural properties.
+
+Slow tier (builds engines): drain-migrates-all-requests -- a drain
+mid-run leaves every in-flight request terminal with outputs
+bit-identical to an undisturbed run (migration parity, the zero-drop
+invariant) -- resize racing an injected decode crash (the chaos case:
+undrain-on-last-alive plus recovery still terminates everything), and
+the ClusterController end-to-end: a workload shift trips the hysteresis
+detector, triggers a calibrated re-plan, and executes a
+make-before-break resize with zero dropped requests.
+"""
+
+import time
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.models import transformer as tr
+from repro.serving.controller import (ClusterController, DriftDetector,
+                                      TelemetrySample, collect_telemetry)
+from repro.serving.faults import (LEGAL_HEALTH_TRANSITIONS, EngineCrash,
+                                  EngineHealth, FaultInjector, FaultPlan)
+from repro.serving.request import State
+from repro.serving.trace import synthesize_trace
+
+VOCAB = 64
+
+
+# ---------------------------------------------------------------------------
+# Engine-health transition graph (fast)
+# ---------------------------------------------------------------------------
+
+def test_health_transition_graph_shape():
+    """The graph IS the spec: HEALTHY/DEGRADED may start draining or die,
+    a drain can only be aborted (-> DEGRADED) or die, DEAD is terminal."""
+    g = LEGAL_HEALTH_TRANSITIONS
+    assert set(g) == set(EngineHealth)
+    assert g[EngineHealth.HEALTHY] == frozenset(
+        {EngineHealth.DEGRADED, EngineHealth.DRAINING, EngineHealth.DEAD})
+    assert g[EngineHealth.DEGRADED] == frozenset(
+        {EngineHealth.DRAINING, EngineHealth.DEAD})
+    assert g[EngineHealth.DRAINING] == frozenset(
+        {EngineHealth.DEGRADED, EngineHealth.DEAD})
+    assert g[EngineHealth.DEAD] == frozenset()
+    # no edge re-enters HEALTHY: once an engine has been touched it stays
+    # marked (DEGRADED at best) -- and nothing leaves DEAD
+    assert all(EngineHealth.HEALTHY not in targets for targets in g.values())
+
+
+class _HealthOnly:
+    """Minimal stand-in exposing the engine health API (no jax)."""
+    from repro.serving.engine import RAGEngine as _E
+    health = EngineHealth.HEALTHY
+    fail_reason = None
+    drain = _E.drain
+    undrain = _E.undrain
+    fail = _E.fail
+    degrade = _E.degrade
+    accepting = _E.accepting
+    healthy = _E.healthy
+
+
+def test_engine_health_methods_enforce_graph():
+    e = _HealthOnly()
+    assert e.healthy and e.accepting
+    e.drain()
+    assert e.health is EngineHealth.DRAINING
+    assert e.healthy and not e.accepting        # alive, not accepting
+    e.drain()                                   # idempotent
+    assert e.health is EngineHealth.DRAINING
+    e.undrain()
+    assert e.health is EngineHealth.DEGRADED    # only legal drain-abort
+    assert e.accepting
+    e.undrain()                                 # no-op off DRAINING
+    assert e.health is EngineHealth.DEGRADED
+    e.drain()                                   # DEGRADED -> DRAINING legal
+    e.fail("chaos")
+    assert e.health is EngineHealth.DEAD
+    with pytest.raises(EngineCrash):
+        e.drain()                               # no DEAD -> DRAINING edge
+    e.undrain()                                 # no-op: DEAD is terminal
+    assert e.health is EngineHealth.DEAD
+
+
+def test_health_state_walks_stay_legal():
+    """Random walks through the API never produce an illegal edge."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        e = _HealthOnly()
+        prev = e.health
+        for _step in range(12):
+            op = rng.choice(["drain", "undrain", "fail", "degrade"])
+            try:
+                getattr(e, op)()
+            except EngineCrash:
+                pass
+            if e.health is not prev:
+                assert e.health in LEGAL_HEALTH_TRANSITIONS[prev], \
+                    f"illegal {prev} -> {e.health} via {op}"
+            prev = e.health
+
+
+# ---------------------------------------------------------------------------
+# DriftDetector hysteresis (fast)
+# ---------------------------------------------------------------------------
+
+def test_drift_requires_patience():
+    d = DriftDetector(band=0.5, clear_band=0.2, patience=3)
+    assert not d.update(2.0, 1.0)      # 1 outlier window
+    assert not d.update(2.0, 1.0)      # 2
+    assert d.update(2.0, 1.0)          # 3 consecutive -> drift
+    assert d.streak == 3
+
+
+def test_single_spike_never_triggers():
+    """An isolated outlier window between normal windows never reaches
+    patience -- the anti-flake property."""
+    d = DriftDetector(band=0.5, clear_band=0.2, patience=2)
+    for _ in range(10):
+        assert not d.update(5.0, 1.0)  # spike: streak 1 < patience
+        assert not d.update(1.0, 1.0)  # normal window resets the streak
+        assert d.streak == 0
+
+
+def test_hysteresis_gap_holds_streak():
+    """Deviation between clear_band and band neither arms nor clears --
+    the anti-flapping property."""
+    d = DriftDetector(band=0.5, clear_band=0.2, patience=2)
+    assert not d.update(1.6, 1.0)      # dev 0.6 > band: streak 1
+    assert not d.update(1.3, 1.0)      # dev 0.3 in the gap: holds at 1
+    assert d.update(1.6, 1.0)          # streak 2 -> drift
+    assert d.update(1.4, 1.0)          # gap: still drifted
+    assert not d.update(1.1, 1.0)      # inside clear_band: resets
+    assert d.streak == 0
+
+
+def test_clear_band_must_be_tighter():
+    with pytest.raises(ValueError):
+        DriftDetector(band=0.3, clear_band=0.3)
+    with pytest.raises(ValueError):
+        DriftDetector(band=0.3, clear_band=0.5)
+    with pytest.raises(ValueError):
+        DriftDetector(patience=0)
+
+
+def test_none_measurements_hold_state():
+    d = DriftDetector(band=0.5, clear_band=0.2, patience=1)
+    assert not d.update(None, 1.0)
+    assert not d.update(1.0, None)
+    assert d.update(2.0, 1.0)
+    assert d.update(None, 1.0)         # missing window keeps the verdict
+
+
+def test_drift_over_synthetic_telemetry_regime_shift():
+    """A scripted regime change (8 -> 24 QPS) trips the detector exactly
+    once the post-shift windows accumulate patience; the pre-shift noise
+    (+-10%) never does."""
+    d = DriftDetector(band=0.5, clear_band=0.2, patience=3)
+    rng = np.random.default_rng(1)
+    ref = 8.0
+    for _ in range(20):                # noisy steady state
+        assert not d.update(ref * rng.uniform(0.9, 1.1), ref)
+    fired_at = None
+    for i in range(6):                 # regime shift
+        if d.update(24.0 * rng.uniform(0.95, 1.05), ref):
+            fired_at = i
+            break
+    assert fired_at == 2               # exactly `patience` windows in
+
+
+# ---------------------------------------------------------------------------
+# synthesize_trace: RAGPulse workload shape (fast)
+# ---------------------------------------------------------------------------
+
+def test_synthesize_trace_structure_and_determinism():
+    kw = dict(mean_rate=10.0, presets=("hyde", "rerank"),
+              preset_weights=(3.0, 1.0), seed=5)
+    a = synthesize_trace(120, VOCAB, **kw)
+    b = synthesize_trace(120, VOCAB, **kw)
+    assert len(a) == 120
+    assert all(x.to_json() == y.to_json() for x, y in zip(a, b))
+    assert all(e1.arrival_s <= e2.arrival_s for e1, e2 in zip(a, a[1:]))
+    assert {e.preset for e in a} == {"hyde", "rerank"}
+    hyde = sum(e.preset == "hyde" for e in a)
+    assert hyde > 120 // 2             # 3:1 weighting is visible
+    assert synthesize_trace(120, VOCAB, seed=6)[0].to_json() \
+        != a[0].to_json()
+
+
+def test_synthesize_trace_heavy_tails_and_t0():
+    es = synthesize_trace(400, VOCAB, q_len_median=8, q_len_sigma=0.8,
+                          out_median=8, out_sigma=0.8, seed=2)
+    q_lens = np.array([len(e.question) for e in es])
+    outs = np.array([e.max_new_tokens for e in es])
+    # lognormal: mean exceeds median (right-skew), spread is real
+    assert q_lens.mean() > np.median(q_lens)
+    assert q_lens.max() >= 3 * np.median(q_lens)
+    assert outs.max() >= 3 * np.median(outs)
+    assert q_lens.min() >= 1 and outs.min() >= 1
+    shifted = synthesize_trace(10, VOCAB, t0=100.0, seed=2)
+    assert shifted[0].arrival_s > 100.0
+
+
+def test_synthesize_trace_diurnal_rate_varies():
+    """Arrival rate measured in quarters of the (one-period) trace must
+    swing with the sinusoid -- peak quarter well above trough quarter."""
+    es = synthesize_trace(600, VOCAB, mean_rate=20.0,
+                          diurnal_amplitude=0.8, period_s=30.0,
+                          burst_prob=0.0, seed=3)
+    ts = np.array([e.arrival_s for e in es])
+    span = ts[-1]
+    rates = []
+    for q in range(4):
+        lo, hi = span * q / 4, span * (q + 1) / 4
+        n = int(np.sum((ts >= lo) & (ts < hi)))
+        rates.append(n / (hi - lo))
+    assert max(rates) > 1.5 * min(rates)
+
+
+# ---------------------------------------------------------------------------
+# Live resize on a real cluster (slow)
+# ---------------------------------------------------------------------------
+
+def _component(seed, causal=True):
+    import jax
+    cfg = tr.TransformerConfig(name=f"ct{seed}", n_layers=2, d_model=32,
+                               n_heads=4, n_kv_heads=2, d_head=8, d_ff=64,
+                               vocab_size=VOCAB, causal=causal)
+    from repro.serving.engine import Component
+    return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+
+@pytest.fixture(scope="module")
+def stack():
+    from repro.data.synthetic import topical_corpus
+    gen = _component(0)
+    enc = _component(1, causal=False)
+    corpus, _topics, make_q = topical_corpus(32, 8, VOCAB, n_topics=4)
+    questions = [make_q(i % 4) for i in range(6)]
+    return gen, enc, corpus, questions
+
+
+def _make_cluster(stack, injector=None, n_prefill=2, n_decode=2, **kw):
+    from repro.serving.cluster import RAGCluster
+    from repro.serving.engine import EngineConfig, RAGEngine
+    gen, enc, corpus, _ = stack
+    cluster_kw = {k: kw.pop(k) for k in
+                  ("max_retries", "retry_backoff", "brownout_headroom")
+                  if k in kw}
+    cluster_kw.setdefault("retry_backoff", 0.001)
+    kw.setdefault("decode_slots", 2)
+    kw.setdefault("s_max", 96)
+    kw.setdefault("max_new_tokens", 4)
+    cfg = EngineConfig(**kw)
+    first = RAGEngine(gen, enc, corpus, replace(cfg, decode_slots=1))
+    shared = dict(db_vectors=first.db_vectors, backend=first.backend)
+    prefill = [first] + [
+        RAGEngine(gen, enc, corpus, replace(cfg, decode_slots=1), **shared)
+        for _ in range(n_prefill - 1)]
+    decode = [RAGEngine(gen, enc, corpus, cfg, **shared)
+              for _ in range(n_decode)]
+    cluster = RAGCluster(prefill, decode, injector=injector, **cluster_kw)
+    return cluster, cfg, shared
+
+
+def _assert_no_leaks(cluster):
+    assert not cluster.queue and not cluster.handoff and not cluster.retrying
+    for eng in (cluster.prefill_engines + cluster.decode_engines
+                + [e for _g, _eid, e in cluster.retired]):
+        assert not eng.active and not eng.pending_retrievals
+        assert not eng.prefilling
+        ref = getattr(eng.pool, "ref", None)
+        if ref is not None:
+            assert int(np.sum(ref)) == 0
+
+
+@pytest.fixture(scope="module")
+def baseline(stack):
+    """Undisturbed 2+2 run: the outputs every resized run must match."""
+    from repro.serving.server import RAGServer
+    cluster, _, _ = _make_cluster(stack)
+    server = RAGServer(cluster)
+    handles = [server.submit(q, max_new_tokens=4) for q in stack[3]]
+    server.run_until_idle(max_steps=5000)
+    assert all(h.request.state is State.DONE for h in handles)
+    return [h.request.output for h in handles]
+
+
+@pytest.mark.slow
+def test_drain_migrates_all_requests_bit_identical(stack, baseline):
+    """THE zero-drop acceptance test: drain a decode engine while its
+    slots are full of mid-generation requests.  Every request must end
+    DONE with outputs bit-identical to the undisturbed run (greedy decode
+    + full re-prefill = migration parity), the drained engine must be
+    reaped, and no retry budget may be consumed."""
+    from repro.serving.server import RAGServer
+    cluster, _, _ = _make_cluster(stack)
+    server = RAGServer(cluster)
+    handles = [server.submit(q, max_new_tokens=4) for q in stack[3]]
+    victim = cluster.decode_engines[1]
+    # step until the victim actually holds in-flight work, then drain it
+    for _ in range(200):
+        server.step()
+        if victim.active:
+            break
+    assert victim.active, "victim never got work -- test setup broken"
+    migrating = [r.rid for r in victim.active.values()]
+    cluster.drain_engine(victim)
+    assert victim.health is EngineHealth.DRAINING
+    server.run_until_idle(max_steps=5000)
+
+    assert all(h.request.state is State.DONE for h in handles)
+    outputs = [h.request.output for h in handles]
+    assert outputs == baseline          # bit-identical: migration parity
+    # the drained engine was evacuated and reaped out of the group
+    assert len(cluster.decode_engines) == 1
+    assert cluster.retired and cluster.retired[0][0] == "decode"
+    assert cluster.metrics["engines_removed"] == 1
+    assert cluster.metrics["requests_migrated"] >= len(migrating)
+    # migrations are free: no retry budget consumed, nothing failed
+    for h in handles:
+        assert h.request.retries == 0
+    migrated = [h.request for h in handles
+                if h.request.rid in set(migrating)]
+    assert migrated and all(r.migrations >= 1 for r in migrated)
+    assert cluster.metrics["retries_exhausted"] == 0
+    assert cluster.metrics["requests_retried"] == 0
+    _assert_no_leaks(cluster)
+
+
+@pytest.mark.slow
+def test_drain_refuses_last_accepting_engine(stack):
+    cluster, _, _ = _make_cluster(stack, n_decode=2)
+    a, b = cluster.decode_engines
+    cluster.drain_engine(a)
+    with pytest.raises(ValueError, match="last accepting"):
+        cluster.drain_engine(b)
+    b.degrade()                         # DEGRADED still counts as accepting
+    cluster.drain_engine(b, force=True)
+    assert b.health is EngineHealth.DRAINING
+
+
+@pytest.mark.slow
+def test_resize_under_decode_crash_chaos(stack, baseline):
+    """Resize racing a fault: decode engine 0 takes an injected crash,
+    and the operator's drain of engine 1 lands in the same inter-step
+    window (force=True: the resize decision was already committed).  The
+    next health sweep must abort the drain (DRAINING -> DEGRADED, the
+    last-alive policy), recover BOTH engines' evicted requests onto the
+    survivor, and finish with every request terminal and surviving
+    outputs bit-identical."""
+    from repro.serving.server import RAGServer
+    inj = FaultInjector(FaultPlan.from_schedule(
+        [{"point": "decode_crash", "at": 3, "engine": 0}], seed=7))
+    cluster, _, _ = _make_cluster(stack, injector=inj)
+    server = RAGServer(cluster)
+    handles = [server.submit(q, max_new_tokens=4) for q in stack[3]]
+    drain_target = cluster.decode_engines[1]
+    for _ in range(300):
+        server.step()
+        if inj.log:                     # the crash just fired this step
+            break
+    assert inj.log, "decode crash never fired"
+    assert cluster.decode_engines[0].health is EngineHealth.DEAD
+    # the resize decision raced the crash: force past the last-accepting
+    # guard (a real controller committed before the crash was detected)
+    cluster.drain_engine(drain_target, force=True)
+    assert drain_target.health is EngineHealth.DRAINING
+    server.run_until_idle(max_steps=5000)
+
+    # the sweep aborted the drain rather than failing queued work
+    assert drain_target.health is EngineHealth.DEGRADED
+    assert cluster.metrics["drains_aborted"] >= 1
+    assert len(cluster.decode_engines) == 2      # nothing was reaped
+    # every request terminal; DONE outputs bit-identical to baseline
+    assert all(h.request.done for h in handles)
+    assert any(h.request.state is State.DONE for h in handles)
+    for h, ref in zip(handles, baseline):
+        if h.request.state is State.DONE and not h.request.degraded:
+            assert h.request.output == ref
+    _assert_no_leaks(cluster)
+
+
+@pytest.mark.slow
+def test_add_engine_takes_traffic_and_ids_are_stable(stack):
+    from repro.serving.engine import RAGEngine
+    from repro.serving.server import RAGServer
+    gen, enc, corpus, questions = stack
+    cluster, cfg, shared = _make_cluster(stack, n_prefill=1, n_decode=1)
+    server = RAGServer(cluster)
+    new_eid = cluster.add_decode_engine(
+        RAGEngine(gen, enc, corpus, cfg, **shared))
+    assert new_eid == 1                 # ids are per-group and monotonic
+    assert cluster.metrics["engines_added"] == 1
+    handles = [server.submit(q, max_new_tokens=4) for q in questions]
+    server.run_until_idle(max_steps=5000)
+    assert all(h.request.state is State.DONE for h in handles)
+    # both decode engines served traffic (most-free-slots spreads load)
+    assert set(cluster.decode_of.values()) == {0, 1}
+    summary = cluster.group_summary()
+    assert summary["decode"]["ids"] == [0, 1]
+    assert [pe["eid"] for pe in summary["decode"]["per_engine"]] == [0, 1]
+
+
+@pytest.mark.slow
+def test_controller_drift_replan_resize_end_to_end(stack):
+    """Workload shift -> confirmed drift -> calibrated re-plan -> live
+    resize, zero requests dropped.  Telemetry windows are driven manually
+    (deterministic) rather than via wall-clock hooks."""
+    from repro.configs.rag_pipelines import PRESETS
+    from repro.core.hardware import XPU_C, SystemConfig
+    from repro.core.serving_plan import ServingPlan
+    from repro.serving.engine import RAGEngine
+    from repro.serving.server import RAGServer
+    gen, enc, corpus, questions = stack
+    cluster, cfg, shared = _make_cluster(stack, n_prefill=1, n_decode=1)
+    server = RAGServer(cluster)
+    # the plan/search side runs the paper-scale schema (the engines are
+    # tiny stand-ins deployed with test clamps -- same split the
+    # serving bench uses); calibration fits the specs to the stand-ins
+    schema = PRESETS["baseline"]()
+    system = SystemConfig(n_servers=4, xpu=XPU_C)
+    plan = ServingPlan.optimize(schema, system)
+    made = []
+
+    def factory(group):
+        eng = RAGEngine(gen, enc, corpus,
+                        replace(cfg, decode_slots=1) if group == "prefill"
+                        else cfg, **shared)
+        made.append(group)
+        return eng
+
+    # reference regime well below what the burst offers -> load drift UP
+    ctl = ClusterController(
+        server, schema, system, plan, engine_factory=factory,
+        window_s=5.0, interval_s=0.0, reference_qps=0.25,
+        load_detector=DriftDetector(band=0.5, clear_band=0.2, patience=2),
+        max_engines=2, min_window_arrivals=2, settle_s=0.0)
+
+    # serve a burst ~3x the reference rate, polling the controller by hand
+    handles = [server.submit(q, max_new_tokens=4) for q in questions]
+    fired = []
+    for _ in range(400):
+        server.step()
+        s = ctl.control_step()
+        fired.append((s.offered_qps, ctl.replans))
+        if ctl.replans:
+            break
+    server.run_until_idle(max_steps=5000)
+
+    assert ctl.replans >= 1, f"no re-plan; samples: {fired[-5:]}"
+    assert ctl.resizes >= 1
+    assert made, "resize never used the engine factory"
+    replan = next(e for e in ctl.events if e["event"] == "replan")
+    assert replan["trigger"] == "load"
+    assert any(replan["calibrated"].values()), \
+        "re-plan ran without any measured calibration"
+    assert replan["calibration"], "plan.detail calibration record missing"
+    # scale-up happened (load-proportional: 3x reference on 1 decode)
+    assert len(cluster.decode_engines) >= 2
+    # zero-drop: every request terminal, none FAILED by the resize
+    assert all(h.request.state is State.DONE for h in handles)
+    assert cluster.metrics["retries_exhausted"] == 0
+    _assert_no_leaks(cluster)
+
+
+@pytest.mark.slow
+def test_collect_telemetry_windows_see_current_regime(stack):
+    from repro.serving.server import RAGServer
+    cluster, _, _ = _make_cluster(stack)
+    server = RAGServer(cluster)
+    handles = [server.submit(q, max_new_tokens=4) for q in stack[3]]
+    server.run_until_idle(max_steps=5000)
+    assert all(h.request.state is State.DONE for h in handles)
+    wide = collect_telemetry(server, window_s=3600.0)
+    assert isinstance(wide, TelemetrySample)
+    assert wide.n_arrived == len(handles) and wide.n_done == len(handles)
+    assert wide.ttft_p99 is not None and wide.ttft_p99 > 0
+    # a window that predates the whole run is empty
+    late = collect_telemetry(server, window_s=1e-9,
+                             now=time.monotonic() + 100.0)
+    assert late.n_arrived == 0 and late.n_done == 0
+    assert late.ttft_p99 is None

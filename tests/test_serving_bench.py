@@ -207,6 +207,91 @@ def test_serving_bench_faults_smoke(tmp_path):
     assert bench.compare_results(data, data) == []
 
 
+def test_serving_bench_autoscale_smoke(tmp_path):
+    """--autoscale drives the scripted workload shift through a 1+1
+    cluster with the live controller attached: it must re-plan off
+    measured calibration, resize without dropping a request, keep greedy
+    outputs bit-identical to the unresized run, and land post-resize p99
+    TTFT within 2x of a fresh deploy at the final size."""
+    out = tmp_path / "BENCH_serving.json"
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    res = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "serving_bench.py"),
+         "--smoke", "--backends", "exact", "--autoscale",
+         "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    row = json.loads(out.read_text())["autoscale"]
+    # the shift was detected and acted on, with calibration applied
+    assert row["replans"] >= 1 and row["resizes"] >= 1
+    assert row["engines_added"] >= 1
+    assert row["final"]["decode"] > row["initial"]["decode"]
+    assert any(row["calibrated"].values())
+    assert row["calibration"]           # plan.detail["calibration"]
+    # the zero-drop invariant: a resize delays, never drops
+    assert row["dropped"] == 0 and row["n_done"] == row["n_requests"]
+    assert row["goodput"] == 1.0
+    assert row["all_terminal"] is True and row["no_leaks"] is True
+    # migration is exact: outputs match the unresized run bit for bit
+    assert row["bit_identical_vs_static"] is True
+    # post-settle p99 within 2x of the fresh deploy, on paired samples
+    gate = row["p99_gate"]
+    assert gate["n_samples"] > 0
+    assert gate["ratio"] is not None and gate["ratio"] <= gate["max_ratio"]
+    # the gate passes against the run's own output
+    bench = _bench_module()
+    data = json.loads(out.read_text())
+    assert bench.compare_results(data, data) == []
+
+
+def test_compare_results_gates_autoscale():
+    """Control-plane regressions fail the gate unconditionally: a dropped
+    request, broken bit-parity, a shift that produced no re-plan/resize,
+    or a blown post-resize p99 ratio; goodput is tolerance-gated vs the
+    previous run, and legacy files without the row are not gated."""
+    bench = _bench_module()
+    good = {"presets": {}, "autoscale": {
+        "dropped": 0, "all_terminal": True, "no_leaks": True,
+        "bit_identical_vs_static": True, "replans": 1, "resizes": 1,
+        "goodput": 1.0,
+        "p99_gate": {"ratio": 1.4, "max_ratio": 2.0}}}
+    assert bench.compare_results(good, good, tolerance=0.25) == []
+    assert bench.compare_results(good, {"presets": {}}) == []
+
+    def broke(**kw):
+        row = {**good["autoscale"], **kw}
+        return {"presets": {}, "autoscale": row}
+
+    regs = bench.compare_results(broke(dropped=2), good)
+    assert len(regs) == 1 and "dropped" in regs[0]
+
+    regs = bench.compare_results(broke(bit_identical_vs_static=False),
+                                 good)
+    assert len(regs) == 1 and "diverge" in regs[0]
+
+    regs = bench.compare_results(broke(replans=0, resizes=0), good)
+    assert len(regs) == 1 and "no re-plan" in regs[0]
+
+    regs = bench.compare_results(
+        broke(p99_gate={"ratio": 3.1, "max_ratio": 2.0}), good)
+    assert len(regs) == 1 and "fresh deploy" in regs[0]
+    # a row with no measurable gate (no post-settle samples) also fails
+    regs = bench.compare_results(
+        broke(p99_gate={"ratio": None, "max_ratio": 2.0}), good)
+    assert len(regs) == 1
+
+    regs = bench.compare_results(broke(all_terminal=False,
+                                       no_leaks=False), good)
+    assert len(regs) == 2
+
+    regs = bench.compare_results(broke(goodput=0.5), good,
+                                 tolerance=0.25)
+    assert len(regs) == 1 and "goodput" in regs[0]
+    # legacy current file without the row: nothing to gate
+    assert bench.compare_results({"presets": {}}, good) == []
+
+
 def test_compare_results_gates_goodput_under_faults():
     """Robustness regressions fail the gate: goodput under the pinned
     chaos schedule dropping past tolerance, or the termination invariant
