@@ -38,6 +38,11 @@ Modes:
                            #   handoff corruption, retrieval timeouts) and
                            #   report goodput, recovery counters and the
                            #   termination invariant under faults
+    ... --trace-out T.json # export a Chrome/Perfetto trace (chrome://tracing
+                           #   or https://ui.perfetto.dev) of the chaos run
+                           #   when --faults is on, else of the telemetry
+                           #   overhead run; a JSONL span log lands next to
+                           #   it at T.json.spans.jsonl
     ... --autoscale        # drive a minimal 1+1 cluster through a scripted
                            #   workload shift (low-rate phase A -> high-rate
                            #   phase B) with the live ClusterController
@@ -49,8 +54,9 @@ Modes:
                            #   a fresh deploy at the final size
     ... --compare PREV.json [--tolerance 0.25]
                            # nonzero exit on QPS / TPOT / p99-tail /
-                           # goodput-under-faults / autoscale regression vs
-                           # a previous BENCH_serving.json
+                           # goodput-under-faults / autoscale / tracing-
+                           # overhead regression vs a previous
+                           # BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -311,6 +317,83 @@ def run_optimized(name: str, schema, corpus, questions, max_new_tokens: int,
     return row
 
 
+def run_telemetry(corpus, questions, max_new_tokens: int,
+                  repeats: int = 3) -> tuple:
+    """Measure what the observability layer costs and prove what it
+    records: the same closed batch is served alternately with the tracer
+    off (``NULL_TRACER``) and on (a fresh :class:`SpanTracer` per
+    repeat), on one pre-warmed baseline engine.  ``overhead_frac``
+    compares the best wall of each arm (min-of-N rejects scheduler
+    noise); ``--compare`` fails the run when it exceeds
+    ``max_overhead_frac`` (5%) -- tracing must never become a tax you
+    pay to find out why serving got slow.  The last traced repeat is
+    checked for span well-formedness, its TTFT/TPOT are re-derived from
+    spans and cross-checked against the Request timestamps, and its SLO
+    stage attribution (p99-TTFT decomposed into queue/embed/retrieve/
+    prefill) rides along.  Returns ``(row, tracer, requests)`` so
+    ``--trace-out`` can export the traced run."""
+    from repro.configs.rag_pipelines import PRESETS
+    from repro.serving.engine import RAGEngine
+    from repro.serving.request import Request, State
+    from repro.serving.telemetry import (SpanTracer, derive_latencies,
+                                         slo_summary, validate_spans)
+
+    schema = PRESETS["baseline"]()
+    comps = _components(schema, vocab=128)
+    cfg = _engine_config(schema, "exact", s_max=128,
+                         max_new_tokens=max_new_tokens)
+    engine = RAGEngine(comps["generative"], comps["encoder"], corpus, cfg)
+    # warm the jit caches so neither arm pays compile time
+    engine.serve([Request(question=q.copy()) for q in questions])
+
+    walls = {"off": [], "on": []}
+    tracer, reqs = None, None
+    for _ in range(repeats):
+        for mode in ("off", "on"):        # alternate: drift hits both arms
+            t = SpanTracer() if mode == "on" else None
+            engine.set_tracer(t)
+            batch = [Request(question=q.copy()) for q in questions]
+            t0 = time.perf_counter()
+            engine.serve(batch)
+            walls[mode].append(time.perf_counter() - t0)
+            if mode == "on":
+                tracer, reqs = t, batch
+    engine.set_tracer(None)
+    off, on = min(walls["off"]), min(walls["on"])
+    violations = validate_spans(tracer, reqs)
+
+    # spans and Request timestamps are two recordings of the same events;
+    # they must agree (the classic failure: a retry resets per-attempt
+    # state and one of the two keeps stale times)
+    max_err, n_checked = 0.0, 0
+    for r in reqs:
+        if r.state is not State.DONE or r.ttft is None:
+            continue
+        d = derive_latencies(tracer, r)
+        if d["ttft"] is not None:
+            max_err = max(max_err, abs(d["ttft"] - r.ttft))
+            n_checked += 1
+        if d["tpot"] is not None and len(r.output) > 1:
+            tpot = (r.latency - r.ttft) / (len(r.output) - 1)
+            max_err = max(max_err, abs(d["tpot"] - tpot))
+    row = {
+        "preset": "baseline",
+        "repeats": repeats,
+        "untraced_wall_s": round(off, 4),
+        "traced_wall_s": round(on, 4),
+        "overhead_frac": round(max(on / off - 1.0, 0.0), 4),
+        "max_overhead_frac": 0.05,
+        "spans": len(tracer.spans()),
+        "dropped_spans": tracer.dropped,
+        "spans_well_formed": not violations,
+        "violations": violations[:5],
+        "latency_crosscheck": {"n": n_checked,
+                               "max_err_s": round(max_err, 6)},
+        "slo": slo_summary(tracer, reqs),
+    }
+    return row, tracer, reqs
+
+
 def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
     """Serve a fixed request set on a 2-prefill + 2-decode cluster while
     the deterministic "combined" chaos schedule fires (transient stage
@@ -319,7 +402,14 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
     DONE), recovery counters, p99 TTFT including recovery delays, and the
     termination invariant (every request terminal, no slot/page leaks).
     The schedule and seed are pinned, so the row is comparable across
-    runs and ``--compare`` can gate goodput-under-faults."""
+    runs and ``--compare`` can gate goodput-under-faults.
+
+    The whole run is traced (:class:`SpanTracer` on the cluster): the
+    chaos matrix is exactly where span well-formedness earns its keep --
+    every retry, migration, and injected fault must still leave each
+    request with one SUBMIT, one TERMINAL, and time-disjoint attempts.
+    The verdict lands in the row (gated by ``--compare``) and the trace
+    backs ``--trace-out``.  Returns ``(row, tracer, requests)``."""
     from repro.configs.rag_pipelines import PRESETS
     from repro.serving.cluster import RAGCluster, percentiles
     from repro.serving.engine import RAGEngine
@@ -327,6 +417,7 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
                                       FaultPlan)
     from repro.serving.request import TERMINAL_STATES, State
     from repro.serving.server import RAGServer
+    from repro.serving.telemetry import SpanTracer, validate_spans
 
     schema = PRESETS["baseline"]()
     comps = _components(schema, vocab=128)
@@ -344,6 +435,8 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
         FaultPlan.from_schedule(CHAOS_SCHEDULES["combined"], seed=0))
     cluster = RAGCluster(prefill, decode, injector=injector,
                          retry_backoff=0.005)
+    tracer = SpanTracer()
+    cluster.set_tracer(tracer)
     server = RAGServer(cluster)
     t0 = time.perf_counter()
     handles = [server.submit(q.copy()) for q in questions]
@@ -357,7 +450,8 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
                 and all(not e.active and not e.pending_retrievals
                         for e in cluster.decode_engines))
     sched = cluster.group_summary()["scheduler"]
-    return {
+    violations = validate_spans(tracer, reqs)
+    row = {
         "schedule": "combined",
         "n_requests": len(reqs),
         "n_done": len(done),
@@ -376,7 +470,14 @@ def run_faulted(corpus, questions, max_new_tokens: int) -> dict:
             "brownout_shed", "degraded_answers", "retrieval_fallbacks",
             "retrieval_no_context")},
         "health": cluster.group_summary()["health"],
+        "telemetry": {
+            "spans": len(tracer.spans()),
+            "dropped_spans": tracer.dropped,
+            "spans_well_formed": not violations,
+            "violations": violations[:5],
+        },
     }
+    return row, tracer, reqs
 
 
 def run_autoscale(corpus, make_q, max_new_tokens: int) -> dict:
@@ -586,11 +687,18 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
     the previous run (skipped when either file predates the page-granular
     handoff accounting).
 
+    The ``telemetry`` row gates the observability layer in the CURRENT
+    run unconditionally: tracing overhead must stay under the row's
+    ``max_overhead_frac`` (5%) and the traced run's spans must be
+    well-formed (every span ended, one SUBMIT / one TERMINAL per
+    request, disjoint retry attempts).
+
     ``faults`` rows (``--faults``) gate robustness: the termination
     invariant (every request terminal, no leaked slots/pages) must hold
-    in the CURRENT run unconditionally, and goodput under the pinned
+    in the CURRENT run unconditionally, goodput under the pinned
     chaos schedule must not drop more than ``tolerance`` vs the previous
-    run.
+    run, and the chaos run's trace must itself be well-formed (the fault
+    paths are where span bookkeeping breaks first).
 
     ``autoscale`` rows (``--autoscale``) gate the live control plane's
     invariants in the CURRENT run unconditionally: zero requests dropped
@@ -645,6 +753,20 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
             regressions.append(
                 f"{preset}/optimized: handoff {key} {new_h[key]} > "
                 f"{bound:.1f} (prev {old_h[key]}, tol {tolerance})")
+    new_t = cur.get("telemetry")
+    if new_t is not None:
+        cap = new_t.get("max_overhead_frac", 0.05)
+        frac = new_t.get("overhead_frac")
+        if frac is not None and frac > cap:
+            regressions.append(
+                f"telemetry: tracing overhead {frac:.2%} exceeds the "
+                f"{cap:.0%} cap (untraced {new_t.get('untraced_wall_s')}s "
+                f"-> traced {new_t.get('traced_wall_s')}s)")
+        if not new_t.get("spans_well_formed", True):
+            regressions.append(
+                "telemetry: trace violates span well-formedness: "
+                + "; ".join((new_t.get("violations")
+                             or ["(no detail)"])[:3]))
     new_f = cur.get("faults")
     if new_f is not None:
         if not new_f.get("all_terminal", True):
@@ -661,6 +783,12 @@ def compare_results(cur: dict, prev: dict, tolerance: float = 0.25) -> list:
                 regressions.append(
                     f"faults: goodput {new_f['goodput']} < {bound:.4f} "
                     f"(prev {old_f['goodput']}, tol {tolerance})")
+        tele = new_f.get("telemetry")
+        if tele is not None and not tele.get("spans_well_formed", True):
+            regressions.append(
+                "faults: chaos-run trace violates span well-formedness: "
+                + "; ".join((tele.get("violations")
+                             or ["(no detail)"])[:3]))
     new_a = cur.get("autoscale")
     if new_a is not None:
         if new_a.get("dropped", 0):
@@ -764,6 +892,10 @@ def main(argv=None) -> dict:
                         "attached (drift -> calibrated re-plan -> "
                         "zero-drop resize) and report the control-plane "
                         "invariants")
+    p.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                   help="write a Chrome/Perfetto trace of the chaos run "
+                        "(--faults) or of the traced telemetry run, plus "
+                        "a JSONL span log at TRACE.json.spans.jsonl")
     p.add_argument("--compare", default=None, metavar="PREV.json",
                    help="exit nonzero on QPS/TPOT regression vs a previous "
                         "BENCH_serving.json")
@@ -840,17 +972,35 @@ def main(argv=None) -> dict:
                       f"tpot p50/p99 = {g['decode']['tpot_s']['p50']}/"
                       f"{g['decode']['tpot_s']['p99']}s", flush=True)
 
+    # the observability layer's own row: tracing overhead (gated at 5%),
+    # span well-formedness, span-vs-timestamp latency crosscheck, and the
+    # p99-TTFT stage decomposition
+    row, tele_tracer, _tele_reqs = run_telemetry(corpus, questions, max_new)
+    results["telemetry"] = row
+    slo = row["slo"]
+    print(f"telemetry: overhead={row['overhead_frac'] * 100:.1f}% "
+          f"(cap {row['max_overhead_frac'] * 100:.0f}%), "
+          f"spans={row['spans']} dropped={row['dropped_spans']} "
+          f"well_formed={row['spans_well_formed']}, "
+          f"crosscheck max_err={row['latency_crosscheck']['max_err_s']}s\n"
+          f"  p99 ttft breakdown: "
+          f"{slo.get('ttft_p99_breakdown_s')}", flush=True)
+    trace_tracer = tele_tracer
+
     if args.faults:
-        row = run_faulted(corpus, questions, max_new)
+        row, trace_tracer, _f_reqs = run_faulted(corpus, questions, max_new)
         results["faults"] = row
         rec = row["recovery"]
+        tele = row["telemetry"]
         print(f"faults[{row['schedule']}]: goodput={row['goodput']} "
               f"({row['n_done']}/{row['n_requests']} done), "
               f"all_terminal={row['all_terminal']} "
               f"no_leaks={row['no_leaks']}, fired={row['faults_fired']}, "
               f"retried={rec['requests_retried']} "
               f"failures={rec['engine_failures']} "
-              f"degraded={rec['degraded_answers']}", flush=True)
+              f"degraded={rec['degraded_answers']}, "
+              f"spans={tele['spans']} "
+              f"well_formed={tele['spans_well_formed']}", flush=True)
 
     if args.autoscale:
         row = run_autoscale(corpus, make_q, max_new)
@@ -870,6 +1020,21 @@ def main(argv=None) -> dict:
               f"deploy = {g['post_resize_ttft_p99_s']}s vs "
               f"{g['fresh_deploy_ttft_p99_s']}s "
               f"({g['ratio']}x, max {g['max_ratio']}x)", flush=True)
+
+    if args.trace_out:
+        from repro.serving.telemetry import export_jsonl, export_perfetto
+        doc = export_perfetto(trace_tracer, args.trace_out)
+        spans_path = args.trace_out + ".spans.jsonl"
+        n_spans = export_jsonl(trace_tracer, spans_path)
+        results["meta"]["trace_out"] = {
+            "path": args.trace_out,
+            "source": "faults" if args.faults else "telemetry",
+            "events": len(doc["traceEvents"]),
+            "spans": n_spans,
+        }
+        print(f"wrote {args.trace_out} ({len(doc['traceEvents'])} events; "
+              f"load in https://ui.perfetto.dev) and {spans_path} "
+              f"({n_spans} spans)")
 
     Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")

@@ -1,0 +1,103 @@
+"""Trace one request end to end through a disaggregated RAG cluster.
+
+Every request carries an ordered span timeline (SUBMIT -> ADMIT ->
+STAGE:<name> ... -> RETRIEVE -> PREFILL -> HANDOFF -> DECODE ->
+TERMINAL): attach a SpanTracer to the cluster, serve the full_pipeline
+preset (rewrite + multi-query + rerank + safety screen), then print the
+span tree of one finished request and its SLO attribution -- which stage
+actually spent the latency budget.
+
+The same tracer feeds the Chrome/Perfetto exporter
+(``telemetry.export_perfetto``); ``benchmarks/serving_bench.py
+--trace-out`` writes a loadable trace of a whole chaos run.
+
+Run:  PYTHONPATH=src python examples/trace_request.py
+"""
+
+import time
+
+import jax
+
+from repro.configs.rag_pipelines import PRESETS
+from repro.data.synthetic import topical_corpus
+from repro.models import transformer as tr
+from repro.serving.cluster import RAGCluster
+from repro.serving.engine import Component, EngineConfig, RAGEngine
+from repro.serving.server import RAGServer
+from repro.serving.telemetry import SpanTracer, slo_attribution
+
+VOCAB = 128
+
+
+def component(seed, causal=True, d=48):
+    cfg = tr.TransformerConfig(name=f"t{seed}", n_layers=2, d_model=d,
+                               n_heads=4, n_kv_heads=2, d_head=16, d_ff=64,
+                               vocab_size=VOCAB, causal=causal)
+    return Component(cfg, tr.init_params(jax.random.PRNGKey(seed), cfg))
+
+
+def print_span_tree(spans) -> None:
+    """Indent spans by time containment: a span that starts and ends
+    inside another is its child (the request's own timeline is a clean
+    nesting, so a stack suffices)."""
+    t0 = min(s.t0 for s in spans)
+    stack = []
+    for s in sorted(spans, key=lambda s: (s.t0, -(s.t1 or s.t0))):
+        while stack and (s.t1 or s.t0) > stack[-1] + 1e-9:
+            stack.pop()
+        where = f" @{s.engine}" if s.engine else ""
+        attrs = f"  {s.attrs}" if s.attrs else ""
+        print(f"  {'  ' * len(stack)}{s.kind:<16} "
+              f"+{(s.t0 - t0) * 1e3:8.2f}ms "
+              f"{s.duration * 1e3:8.2f}ms{where}{attrs}")
+        if s.t1 is not None and s.t1 > s.t0:
+            stack.append(s.t1)
+
+
+def main():
+    schema = PRESETS["full_pipeline"]()
+    corpus, _topics, make_q = topical_corpus(96, 10, VOCAB, n_topics=4)
+    cfg = EngineConfig.from_schema(schema, decode_slots=2, s_max=128,
+                                   retrieval_k=2, max_new_tokens=6,
+                                   rewrite_tokens=3, fanout_tokens=2,
+                                   rerank_candidates=6)
+    comps = dict(rewriter=component(2), reranker=component(3, causal=False,
+                                                           d=32),
+                 safety=component(4, causal=False, d=32))
+
+    def engine():
+        return RAGEngine(component(0), component(1, causal=False, d=32),
+                         corpus, cfg, **comps)
+
+    cluster = RAGCluster([engine()], [engine()])
+    tracer = SpanTracer()
+    cluster.set_tracer(tracer)            # one switch turns tracing on
+    server = RAGServer(cluster)
+
+    # deadlines are absolute engine-clock seconds; generous here because
+    # the first request pays one-time jit compiles on this CPU stand-in
+    deadline = time.monotonic() + 60.0
+    handles = [server.submit(make_q(t, q_len=8), deadline=deadline)
+               for t in range(3)]
+    server.run_until_idle()
+
+    req = next(h.request for h in handles if h.state.value == "done")
+    spans = tracer.spans_for(req.rid)
+    print(f"request {req.rid}: state={req.state.value} "
+          f"ttft={req.ttft:.4f}s latency={req.latency:.4f}s "
+          f"({len(spans)} spans)\n")
+    print("span tree (start offset, duration):")
+    print_span_tree(spans)
+
+    att = slo_attribution(tracer, req)
+    print(f"\nSLO attribution (budget {att['budget_s']:.2f}s, "
+          f"spent {att['total_s'] * 1e3:.1f}ms):")
+    for stage, spent in sorted(att["stages_s"].items(),
+                               key=lambda kv: -kv[1]):
+        frac = spent / att["total_s"] if att["total_s"] else 0.0
+        print(f"  {stage:<12} {spent * 1e3:8.2f}ms  "
+              f"{'#' * max(int(frac * 40), 1)}")
+
+
+if __name__ == "__main__":
+    main()

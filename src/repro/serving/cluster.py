@@ -86,8 +86,11 @@ from repro.core.stage_registry import REGISTRY
 from repro.serving.engine import RAGEngine
 from repro.serving.faults import (EngineCrash, EngineHealth, FaultInjector,
                                   TransientStageError)
-from repro.serving.kv_cache import payload_checksum, payload_nbytes
+from repro.serving.kv_cache import (payload_checksum, payload_nbytes,
+                                    payload_summary)
 from repro.serving.request import Request, State
+from repro.serving.telemetry import (NULL_TRACER, MetricsRegistry,
+                                     slo_summary)
 
 
 def percentiles(values, digits: int = 5) -> dict:
@@ -148,26 +151,28 @@ class RAGCluster:
         self.prefill_history: dict[int, list[int]] = {}
         self.decode_history: dict[int, list[int]] = {}
         self._dead_seen: set = set()          # (group, eid) counted once
-        self.metrics = {"shed_requests": 0, "expired_queued": 0,
-                        "expired_in_handoff": 0, "expired_retrying": 0,
-                        "handoffs": 0,
-                        # shipped at decode-slot assignment, counted only
-                        # after the import succeeded; pages the
-                        # destination pool already cached are referenced,
-                        # not transferred
-                        "handoff_bytes": 0, "handoff_pages": 0,
-                        "handoff_pages_shared": 0,
-                        # what a dense whole-prefix export would have moved
-                        "handoff_bytes_full": 0,
-                        # fault layer
-                        "engine_failures": 0, "requests_retried": 0,
-                        "retries_exhausted": 0, "handoff_corrupt": 0,
-                        "handoff_dropped": 0, "stage_errors": 0,
-                        "brownout_shed": 0, "failed_no_capacity": 0,
-                        "aborted": 0,
-                        # live resize
-                        "requests_migrated": 0, "engines_added": 0,
-                        "engines_removed": 0, "drains_aborted": 0}
+        self.tracer = NULL_TRACER             # swapped in via set_tracer
+        self.metrics = MetricsRegistry(
+            {"shed_requests": 0, "expired_queued": 0,
+             "expired_in_handoff": 0, "expired_retrying": 0,
+             "handoffs": 0,
+             # shipped at decode-slot assignment, counted only
+             # after the import succeeded; pages the
+             # destination pool already cached are referenced,
+             # not transferred
+             "handoff_bytes": 0, "handoff_pages": 0,
+             "handoff_pages_shared": 0,
+             # what a dense whole-prefix export would have moved
+             "handoff_bytes_full": 0,
+             # fault layer
+             "engine_failures": 0, "requests_retried": 0,
+             "retries_exhausted": 0, "handoff_corrupt": 0,
+             "handoff_dropped": 0, "stage_errors": 0,
+             "brownout_shed": 0, "failed_no_capacity": 0,
+             "aborted": 0,
+             # live resize
+             "requests_migrated": 0, "engines_added": 0,
+             "engines_removed": 0, "drains_aborted": 0})
         for eng in prefill_engines:
             self._attach("prefill", eng)
         for eng in decode_engines:
@@ -226,6 +231,10 @@ class RAGCluster:
         TTFT says its deadline is already unmeetable (the optimizer's
         prediction doing admission control)."""
         self.requests.append(req)
+        if self.tracer.enabled and req.tracer is None:
+            # direct submitters (no RAGServer in front) still get the
+            # terminal-state span hook
+            req.tracer = self.tracer
         if (req.deadline is not None and self.predicted_ttft is not None
                 and req.t_arrive + self.predicted_ttft > req.deadline):
             req.state = State.EXPIRED
@@ -251,7 +260,19 @@ class RAGCluster:
             self._decode_ids.append(eid)
         if self.injector is not None:
             eng.set_injector(self.injector)
+        eng.trace_name = f"{group}{eid}"      # stable span track id
+        eng.set_tracer(self.tracer)
         return eid
+
+    def set_tracer(self, tracer) -> None:
+        """Install one span tracer across the whole cluster: every engine
+        (live and future, via :meth:`_attach`) and the fault injector emit
+        onto it.  ``None``/``NULL_TRACER`` turns tracing off."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        for eng in self.prefill_engines + self.decode_engines:
+            eng.set_tracer(self.tracer)
+        if self.injector is not None:
+            self.injector.tracer = self.tracer
 
     def add_prefill_engine(self, eng: RAGEngine) -> int:
         """Grow the prefill group at runtime; returns the engine's stable
@@ -536,12 +557,15 @@ class RAGCluster:
         (:meth:`_dispatch_prefill`) classifies the failure and recovers
         the request."""
         inj = self.injector
+        if self.tracer.enabled:
+            self.tracer.event("ADMIT", rid=req.rid, engine=eng.trace_name,
+                              attempt=req.retries + req.migrations)
         if inj is not None and inj.fire("stage_error", engine=eid,
                                         rid=req.rid):
             raise TransientStageError(
                 f"injected stage error on prefill engine {eid}")
         for ex in eng.executors:
-            with eng._timed(ex.name):
+            with eng._timed(ex.name, req=req):
                 ex.run(eng, req)
         req.prompt = eng._assemble_prompt(req)
         if inj is not None and inj.fire("prefill_crash", engine=eid,
@@ -550,7 +574,7 @@ class RAGCluster:
             raise EngineCrash(f"prefill engine {eid} crashed mid-request")
         slot = eng.pool.alloc(req.rid)
         try:
-            with eng._timed("prefill"):
+            with eng._timed("prefill", req=req):
                 eng.prefill_compute(req, slot)
             kv, length = eng.pool.export_slot(slot)
         finally:
@@ -559,12 +583,19 @@ class RAGCluster:
         # is rejected instead of decoded
         checksum = payload_checksum(kv)
         full_bytes = payload_nbytes(kv)
+        kv_summary = payload_summary(kv, length)   # before any injection
         if inj is not None:
             if inj.fire("handoff_drop", engine=eid, rid=req.rid):
                 kv = None                      # lost "on the wire"
             elif inj.fire("handoff_corrupt", engine=eid, rid=req.rid):
                 kv = inj.corrupt(kv)
         req.state = State.HANDOFF
+        if self.tracer.enabled:
+            # open until the decode-side import succeeds (or a retry /
+            # expiry closes it): the span measures queue + transit time
+            self.tracer.begin("HANDOFF", rid=req.rid, engine=eng.trace_name,
+                              attempt=req.retries + req.migrations,
+                              attrs=kv_summary)
         self.prefill_history.setdefault(req.rid, []).append(eid)
         self.prefill_of[req.rid] = eid
         self._prefill_load[eid] += len(req.prompt)
@@ -652,6 +683,16 @@ class RAGCluster:
             self.metrics["handoff_pages_shared"] += stats.pages_shared
             req.slot = slot
             req.t_decode = time.monotonic()
+            if self.tracer.enabled:
+                self.tracer.end_kind(
+                    req.rid, "HANDOFF", t=req.t_decode,
+                    attrs={"bytes_shipped": stats.nbytes,
+                           "pages": stats.pages,
+                           "pages_shared": stats.pages_shared})
+                self.tracer.begin("DECODE", rid=req.rid,
+                                  engine=eng.trace_name, t=req.t_decode,
+                                  attempt=req.retries + req.migrations,
+                                  attrs={"slot": slot})
             req.state = State.DECODE
             eng.active[slot] = req
             self.decode_history.setdefault(req.rid, []).append(eid)
@@ -767,7 +808,7 @@ class RAGCluster:
             for i in rids:
                 if i in passes_d:
                     passes_d[i] += 1
-        scheduler = dict(self.metrics)
+        scheduler = self.metrics.snapshot()
         live = self.prefill_engines + self.decode_engines
         every = live + [e for _g, _eid, e in self.retired]
         scheduler["degraded_answers"] = sum(
@@ -778,7 +819,7 @@ class RAGCluster:
             b.metrics.get("fallbacks", 0) for b in backends.values())
         scheduler["retrieval_no_context"] = sum(
             b.metrics.get("no_context", 0) for b in backends.values())
-        return {
+        out = {
             "window_s": window_s,
             "prefill": {
                 "n_engines": len(self.prefill_engines),
@@ -811,6 +852,11 @@ class RAGCluster:
             },
             "scheduler": scheduler,
         }
+        if self.tracer.enabled:
+            # span-derived deadline-budget attribution (queue vs stages vs
+            # prefill vs handoff vs decode) across terminal requests
+            out["slo"] = slo_summary(self.tracer, self.requests)
+        return out
 
     def describe(self) -> str:
         m = self.metrics

@@ -74,6 +74,8 @@ from repro.retrieval.backend import (ExactBackend, FallbackBackend,
 from repro.serving.faults import EngineCrash, EngineHealth
 from repro.serving.kv_cache import KVCachePool, PagedKVCachePool
 from repro.serving.request import Request, State
+from repro.serving.telemetry import (NULL_TRACER, MetricsRegistry,
+                                     stage_kind)
 
 
 def bucket_len(n: int, floor: int = 8) -> int:
@@ -209,13 +211,19 @@ class RAGEngine:
         self.active: dict[int, Request] = {}     # slot -> request
         self.prefilling: dict[int, int] = {}     # slot -> prompt cursor
         self.pending_retrievals: list[Request] = []
-        self.metrics = {"decode_steps": 0, "idle_slot_steps": 0,
-                        "retrieval_batches": 0, "retrieved_queries": 0,
-                        "prefills": 0,
-                        "prefill_compiles": 0, "append_compiles": 0,
-                        "host_syncs": 0, "decode_host_syncs": 0,
-                        "cache_copy_bytes": 0, "capacity_stops": 0,
-                        "degraded_answers": 0, "stage_time_s": {}}
+        self.metrics = MetricsRegistry(
+            {"decode_steps": 0, "idle_slot_steps": 0,
+             "retrieval_batches": 0, "retrieved_queries": 0,
+             "prefills": 0,
+             "prefill_compiles": 0, "append_compiles": 0,
+             "host_syncs": 0, "decode_host_syncs": 0,
+             "cache_copy_bytes": 0, "capacity_stops": 0,
+             "degraded_answers": 0, "stage_time_s": {}})
+        # telemetry: no-op by default (zero-cost-when-off); a server or
+        # cluster swaps in a SpanTracer via set_tracer
+        self.tracer = NULL_TRACER
+        self.trace_name = "engine0"          # span track id; cluster renames
+        self.tick_no = 0                     # decode ticks taken
         # fault layer: health is driven by fail()/degrade() (the injector
         # or a real prober); a DEAD engine refuses work until replaced
         self.health = EngineHealth.HEALTHY
@@ -375,21 +383,48 @@ class RAGEngine:
     def has_executor(self, name: str) -> bool:
         return any(ex.name == name for ex in self.executors)
 
+    def set_tracer(self, tracer) -> None:
+        """Install a span tracer (``NULL_TRACER`` to turn tracing off)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+
     @contextmanager
-    def _timed(self, stage: str):
-        """Accumulate wall time into ``metrics['stage_time_s'][stage]``.
+    def _timed(self, stage: str, req: Request | None = None, attrs=None):
+        """Accumulate wall time into ``metrics['stage_time_s'][stage]``, a
+        per-stage latency histogram, and (when tracing) a span.
 
         Attribution is wall-clock at the call site: executor stages are
         timed inclusively (their internal ``embed``/``retrieve`` primitive
         calls also count toward the primitive buckets), which is the
         breakdown the XPU-side cost-model calibration wants -- where does
-        a served second actually go."""
-        t0 = time.perf_counter()
+        a served second actually go.  Uses ``time.monotonic`` -- the same
+        clock as the request timestamps and spans, so stage time and
+        request latency are directly comparable.
+
+        With ``req`` the span is request-scoped (opened, so executors can
+        :meth:`SpanTracer.annotate` payload sizes onto it mid-stage);
+        without, it lands on this engine's track."""
+        t0 = time.monotonic()
+        tracer = self.tracer
+        span = None
+        if tracer.enabled and req is not None:
+            span = tracer.begin(stage_kind(stage), rid=req.rid,
+                                engine=self.trace_name, t=t0,
+                                tick=self.tick_no,
+                                attempt=req.retries + req.migrations,
+                                attrs=attrs)
         try:
             yield
         finally:
+            t1 = time.monotonic()
             acc = self.metrics["stage_time_s"]
-            acc[stage] = acc.get(stage, 0.0) + time.perf_counter() - t0
+            acc[stage] = acc.get(stage, 0.0) + t1 - t0
+            self.metrics.observe("stage_seconds:" + stage, t1 - t0)
+            if span is not None:
+                tracer.end(span, t=t1)
+            elif tracer.enabled:
+                tracer.record(stage_kind(stage), t0, t1,
+                              engine=self.trace_name, tick=self.tick_no,
+                              attrs=attrs)
 
     def _embed_batched(self, tokens: np.ndarray, bs: int = 32) -> jnp.ndarray:
         """Encode rows in fixed-size batches through one jitted encoder.
@@ -481,12 +516,21 @@ class RAGEngine:
         req.output.append(tok)
         req.t_first_token = time.monotonic()
         self.metrics["prefills"] += 1
+        if self.tracer.enabled:
+            # lands on the enclosing PREFILL span (payload attribution)
+            self.tracer.annotate(req.rid, prompt_tokens=length,
+                                 prefill_bucket=bucket)
 
     def _admit(self) -> None:
         while self.queue and self.pool.free:
             req = self.queue.pop(0)
+            tracer = self.tracer
+            if tracer.enabled:
+                tracer.event("ADMIT", rid=req.rid, engine=self.trace_name,
+                             tick=self.tick_no,
+                             attempt=req.retries + req.migrations)
             for ex in self.executors:
-                with self._timed(ex.name):
+                with self._timed(ex.name, req=req):
                     ex.run(self, req)
             req.prompt = self._assemble_prompt(req)
             slot = self.pool.alloc(req.rid)
@@ -499,9 +543,15 @@ class RAGEngine:
                 self.prefilling[slot] = 0
                 self.active[slot] = req
             else:
-                with self._timed("prefill"):
+                with self._timed("prefill", req=req):
                     self._prefill(req, slot)
                 self.active[req.slot] = req
+                if tracer.enabled:
+                    # decode-slot residency: open until DONE/retry closes it
+                    tracer.begin("DECODE", rid=req.rid,
+                                 engine=self.trace_name, tick=self.tick_no,
+                                 attempt=req.retries + req.migrations,
+                                 attrs={"slot": req.slot})
 
     def _prefill_tick(self) -> None:
         """Advance every chunk-prefilling slot by one prompt chunk.  The
@@ -514,10 +564,19 @@ class RAGEngine:
         if not self.prefilling:
             return
         chunk = self.cfg.prefill_chunk
+        tracer = self.tracer
         with self._timed("prefill"):
             for slot, cursor in list(self.prefilling.items()):
                 req = self.active[slot]
                 piece = req.prompt[cursor:cursor + chunk]
+                span = None
+                if tracer.enabled:
+                    span = tracer.begin(
+                        "PREFILL_CHUNK", rid=req.rid,
+                        engine=self.trace_name, tick=self.tick_no,
+                        attempt=req.retries + req.migrations,
+                        attrs={"tokens": len(piece), "cursor": cursor,
+                               "prompt_tokens": len(req.prompt)})
                 logits = self._paged_extend(slot, piece)
                 cursor += len(piece)
                 if cursor >= len(req.prompt):
@@ -528,9 +587,19 @@ class RAGEngine:
                     req.output.append(tok)
                     req.t_first_token = time.monotonic()
                     self.metrics["prefills"] += 1
+                    if span is not None:
+                        tracer.end(span)
                     req.state = State.DECODE
+                    if tracer.enabled:
+                        tracer.begin("DECODE", rid=req.rid,
+                                     engine=self.trace_name,
+                                     tick=self.tick_no,
+                                     attempt=req.retries + req.migrations,
+                                     attrs={"slot": slot})
                 else:
                     self.prefilling[slot] = cursor
+                    if span is not None:
+                        tracer.end(span)
 
     # ---------------- decode loop ------------------------------------------
 
@@ -697,9 +766,11 @@ class RAGEngine:
             self.pool.release(slot)
         self.metrics["decode_steps"] += 1
         self.metrics["idle_slot_steps"] += self.pool.n_slots - len(stepping)
+        self.tick_no += 1
         if not stepping:
             return
-        with self._timed("decode"):
+        attrs = ({"n": len(stepping)} if self.tracer.enabled else None)
+        with self._timed("decode", attrs=attrs):
             self._decode_active(token_vec, stepping)
 
     def _decode_active(self, token_vec, stepping) -> None:
@@ -778,15 +849,18 @@ class RAGEngine:
 
     def metrics_snapshot(self) -> dict:
         """Engine counters merged with the KV pool's page counters
-        (``pages_allocated``/``pages_shared``/... for the paged pool)."""
-        out = dict(self.metrics)
-        out["stage_time_s"] = dict(self.metrics["stage_time_s"])
+        (``pages_allocated``/``pages_shared``/... for the paged pool).
+
+        The snapshot is fully detached: every nested structure (including
+        ``stage_time_s`` and the latency histograms) is a fresh copy, so
+        callers can mutate it without corrupting the live registry."""
+        out = self.metrics.snapshot()
         out["attn_impl"] = self.attn_impl
         out["health"] = self.health.value
         if isinstance(self.backend, FallbackBackend):
             out["retrieval_fallbacks"] = self.backend.metrics["fallbacks"]
             out["retrieval_no_context"] = self.backend.metrics["no_context"]
-        out.update(getattr(self.pool, "metrics", {}))
+        out.update(dict(getattr(self.pool, "metrics", {})))
         return out
 
     def abort_request(self, req: Request, reason: str,

@@ -144,21 +144,29 @@ class FaultInjector:
         self._seen = [0] * len(plan.specs)      # matching occurrences so far
         self.rng = np.random.default_rng(plan.seed)
         self.log: list[tuple] = []              # (point, occurrence, eng, rid)
+        # telemetry: the cluster's set_tracer swaps in a SpanTracer so
+        # every injected fault lands on the trace as a FAULT:<point> event
+        from repro.serving.telemetry import NULL_TRACER
+        self.tracer = NULL_TRACER
 
     def fire(self, point: str, engine: int | None = None,
              rid: int | None = None) -> FaultSpec | None:
         """Count this occurrence of ``point``; return the due spec (and
         log the firing) or None.  At most one spec fires per call."""
         assert point in self.POINTS, point
-        hit = None
+        hit, hit_occ = None, 0
         for i, spec in enumerate(self.plan.specs):
             if spec.point != point or not spec.matches(engine, rid):
                 continue
             self._seen[i] += 1
             if hit is None and \
                     spec.at <= self._seen[i] < spec.at + spec.count:
-                hit = spec
+                hit, hit_occ = spec, self._seen[i]
                 self.log.append((point, self._seen[i], engine, rid))
+        if hit is not None and self.tracer.enabled:
+            self.tracer.event(f"FAULT:{point}", rid=rid,
+                              attrs={"engine": engine,
+                                     "occurrence": hit_occ})
         return hit
 
     def corrupt(self, payload):

@@ -468,6 +468,19 @@ def payload_nbytes(prefix) -> int:
     return KVCachePool.handoff_bytes(prefix)
 
 
+def payload_summary(prefix, length: int) -> dict:
+    """Span-attribution view of a handoff payload: token count, dense
+    payload bytes and (paged layout) page count -- the byte/token sizes
+    the telemetry layer attaches to each HANDOFF span.  Tolerates a
+    payload already lost in transit (``None``)."""
+    if prefix is None:
+        return {"tokens": int(length), "bytes_full": 0, "pages": 0}
+    out = {"tokens": int(length), "bytes_full": payload_nbytes(prefix)}
+    if isinstance(prefix, PagedPrefix):
+        out["pages"] = len(prefix.pages)
+    return out
+
+
 def payload_checksum(prefix) -> int:
     """CRC32 over an exported KV payload's bytes (+ its logical layout).
 

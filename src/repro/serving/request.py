@@ -116,6 +116,10 @@ class Request:
     t_first_token: float | None = None
     t_decode: float | None = None         # decode-slot assignment
     t_done: float | None = None
+    # telemetry: set by the server at submit; the terminal-state hook below
+    # closes any still-open spans and emits the single TERMINAL event, so
+    # span well-formedness rides on the exactly-one-terminal invariant.
+    tracer: object = field(default=None, repr=False, compare=False)
 
     def __setattr__(self, name, value):
         if name == "state":
@@ -126,6 +130,12 @@ class Request:
                     f"({prev}); cannot transition to {value} -- every "
                     f"request reaches exactly one terminal state")
             self.__dict__.setdefault("state_history", []).append(value)
+            object.__setattr__(self, name, value)
+            if value in TERMINAL_STATES:
+                tr = self.__dict__.get("tracer")
+                if tr is not None and tr.enabled:
+                    tr.terminal(self.__dict__.get("rid"), value.value)
+            return
         object.__setattr__(self, name, value)
 
     @property
@@ -162,6 +172,16 @@ class Request:
             self.migrations += 1
         else:
             self.retries += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            # Close the failed attempt's open spans *before* the new one
+            # starts, so per-attempt span sequences are disjoint in time.
+            tr.close_open(self.rid, t=now,
+                          outcome="migrate" if migration else "retry")
+            tr.event("MIGRATE" if migration else "RETRY", rid=self.rid,
+                     t=now, attempt=self.retries + self.migrations,
+                     attrs={"backoff_s": backoff, "retries": self.retries,
+                            "migrations": self.migrations})
         self.t_retry = now + backoff
         self.state = State.RETRYING
         self.rewritten = None

@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.serving.cluster import RAGCluster, percentiles
 from repro.serving.request import Request, State
+from repro.serving.telemetry import (NULL_TRACER, MetricsRegistry,
+                                     slo_summary)
 
 
 class RequestStalledError(RuntimeError):
@@ -142,14 +144,34 @@ class RAGServer:
     arrival timestamp, deadline screening, and per-token streaming over a
     shared continuously-batched :class:`RAGEngine`."""
 
-    def __init__(self, engine):
+    def __init__(self, engine, tracer=None):
         """``engine``: a collocated :class:`~repro.serving.engine.RAGEngine`
-        or a disaggregated :class:`~repro.serving.cluster.RAGCluster`."""
+        or a disaggregated :class:`~repro.serving.cluster.RAGCluster`.
+        ``tracer``: an optional :class:`~repro.serving.telemetry.SpanTracer`
+        installed across the deployment (default: inherit whatever the
+        engine/cluster already carries -- the no-op tracer unless one was
+        set)."""
         self.cluster = engine if isinstance(engine, RAGCluster) else None
         self.engine = None if self.cluster is not None else engine
         self.handles: dict[int, RequestHandle] = {}
         self._live: list[RequestHandle] = []
         self._step_hooks: list[Callable[["RAGServer"], None]] = []
+        # server-level latency histograms (TTFT/TPOT/latency), fed as
+        # requests reach terminal states in _deliver
+        self.metrics = MetricsRegistry()
+        if tracer is not None:
+            self.set_tracer(tracer)
+        else:
+            self.tracer = getattr(self.cluster or self.engine, "tracer",
+                                  NULL_TRACER)
+
+    def set_tracer(self, tracer) -> None:
+        """Install a span tracer on this server and the deployment under
+        it (engine or whole cluster)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        target = self.cluster or self.engine
+        if hasattr(target, "set_tracer"):
+            target.set_tracer(self.tracer)
 
     def add_step_hook(self, fn: Callable[["RAGServer"], None]) -> None:
         """Register a callback fired after every :meth:`step` (idle steps
@@ -233,6 +255,14 @@ class RAGServer:
                         else time.monotonic())
         req.max_new_tokens = min(req.max_new_tokens,
                                  self.cfg.max_new_tokens)
+        if self.tracer.enabled:
+            # before dispatch: SLO-aware shedding may terminate the
+            # request inside cluster.submit, and SUBMIT must precede it
+            if req.tracer is None:
+                req.tracer = self.tracer
+            self.tracer.event("SUBMIT", rid=req.rid, t=req.t_arrive,
+                              attrs={"q_tokens": int(len(req.question)),
+                                     "deadline": req.deadline})
         if self.cluster is not None:
             self.cluster.submit(req)     # may shed (SLO-aware admission)
         else:
@@ -262,9 +292,26 @@ class RAGServer:
         queue[:] = keep
 
     def _deliver(self) -> None:
+        still = []
         for h in self._live:
             h._deliver()
-        self._live = [h for h in self._live if not h.done]
+            if h.done:
+                self._observe_terminal(h.request)
+            else:
+                still.append(h)
+        self._live = still
+
+    def _observe_terminal(self, req: Request) -> None:
+        """Feed the server-level latency histograms as a request leaves
+        the live set (exactly once per request)."""
+        if req.ttft is not None:
+            self.metrics.observe("ttft_s", req.ttft)
+        if req.latency is not None:
+            self.metrics.observe("latency_s", req.latency)
+        if (req.state is State.DONE and req.ttft is not None
+                and len(req.output) > 1):
+            self.metrics.observe(
+                "tpot_s", (req.latency - req.ttft) / (len(req.output) - 1))
 
     def step(self) -> bool:
         """One serving iteration + token delivery.  Single engine: admit ->
@@ -452,6 +499,15 @@ class RAGServer:
         for key, vals in (("ttft", ttfts), ("tpot", tpots)):
             for p, v in percentiles(vals).items():
                 out[f"{key}_{p}_s"] = v
+        hists = self.metrics.snapshot().get("histograms")
+        if hists:
+            # real latency distributions (fixed-bucket histograms), not
+            # just the mean/percentile point estimates above
+            out["hist"] = hists
+        if self.tracer.enabled:
+            # span-derived deadline-budget attribution per stage,
+            # including the p99-TTFT request decomposed by stage
+            out["slo"] = slo_summary(self.tracer, reqs)
         return out
 
 

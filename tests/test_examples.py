@@ -20,6 +20,7 @@ EXAMPLES = {
     "serve_rag.py": [],
     "serve_disagg.py": [],
     "iterative_rag.py": [],
+    "trace_request.py": [],
     "train_lm.py": ["--steps", "30"],
 }
 

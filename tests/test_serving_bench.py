@@ -58,6 +58,17 @@ def test_serving_bench_smoke(tmp_path):
         t = presets["baseline"][backend]["metrics"]["stage_time_s"]
         assert t["prefill"] > 0 and t["decode"] > 0
 
+    # the observability row: tracing overhead measured and under the cap,
+    # spans well-formed, span-derived latencies agreeing with timestamps
+    tele = data["telemetry"]
+    assert tele["overhead_frac"] <= tele["max_overhead_frac"]
+    assert tele["spans_well_formed"] is True and tele["violations"] == []
+    assert tele["spans"] > 0 and tele["dropped_spans"] == 0
+    assert tele["latency_crosscheck"]["n"] > 0
+    assert tele["latency_crosscheck"]["max_err_s"] < 0.05
+    assert tele["slo"]["ttft_p99_s"] > 0
+    assert "queue" in tele["slo"]["ttft_p99_breakdown_s"]
+
     # the regression gate passes against the run's own output (CLI path,
     # in-process: no second bench subprocess)
     bench = _bench_module()
@@ -184,16 +195,20 @@ def test_compare_cli_exits_nonzero_on_regression(tmp_path):
 def test_serving_bench_faults_smoke(tmp_path):
     """--faults drives the pinned chaos schedule through a 2+2 cluster and
     must report the termination invariant intact with nonzero recovery
-    activity."""
+    activity; with --trace-out the whole chaos run exports as a valid
+    Perfetto trace plus a JSONL span log."""
     out = tmp_path / "BENCH_serving.json"
+    trace = tmp_path / "trace.json"
     env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
            "JAX_PLATFORMS": "cpu"}
     res = subprocess.run(
         [sys.executable, str(REPO / "benchmarks" / "serving_bench.py"),
-         "--smoke", "--backends", "exact", "--faults", "--out", str(out)],
+         "--smoke", "--backends", "exact", "--faults", "--out", str(out),
+         "--trace-out", str(trace)],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
     assert res.returncode == 0, res.stderr[-2000:]
-    row = json.loads(out.read_text())["faults"]
+    data = json.loads(out.read_text())
+    row = data["faults"]
     assert row["schedule"] == "combined"
     assert row["all_terminal"] is True and row["no_leaks"] is True
     assert row["faults_fired"] > 0
@@ -201,9 +216,31 @@ def test_serving_bench_faults_smoke(tmp_path):
     assert (row["n_done"] + 0) <= row["n_requests"]
     rec = row["recovery"]
     assert rec["requests_retried"] > 0      # the schedule forced recovery
+    # the chaos run's own trace is well-formed (gated by --compare too)
+    assert row["telemetry"]["spans_well_formed"] is True
+    assert row["telemetry"]["spans"] > 0
+
+    # the trace artifact: valid Perfetto JSON with engine + request
+    # tracks, faults visible as instants, and a span log beside it
+    doc = json.loads(trace.read_text())
+    meta = data["meta"]["trace_out"]
+    assert meta["source"] == "faults"
+    assert meta["events"] == len(doc["traceEvents"]) > 0
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"prefill0", "prefill1", "decode0", "decode1",
+            "cluster"} <= tracks
+    assert any(t.startswith("req ") for t in tracks)
+    instants = {e["name"] for e in doc["traceEvents"] if e["ph"] == "i"}
+    assert any(n.startswith("FAULT:") for n in instants)
+    spans_log = trace.with_name(trace.name + ".spans.jsonl")
+    rows = [json.loads(line) for line in
+            spans_log.read_text().splitlines()]
+    assert len(rows) == meta["spans"] > 0
+    assert {"kind", "t0", "t1", "rid"} <= set(rows[0])
+
     # the gate passes against the run's own output
     bench = _bench_module()
-    data = json.loads(out.read_text())
     assert bench.compare_results(data, data) == []
 
 
@@ -289,6 +326,44 @@ def test_compare_results_gates_autoscale():
                                  tolerance=0.25)
     assert len(regs) == 1 and "goodput" in regs[0]
     # legacy current file without the row: nothing to gate
+    assert bench.compare_results({"presets": {}}, good) == []
+
+
+def test_compare_results_gates_telemetry():
+    """Observability regressions fail the gate in the CURRENT run
+    unconditionally: tracing overhead past the row's cap, or a traced run
+    whose spans are not well-formed (in the overhead run or under
+    faults); legacy files without the rows are not gated."""
+    bench = _bench_module()
+    good = {"presets": {}, "telemetry": {
+        "overhead_frac": 0.01, "max_overhead_frac": 0.05,
+        "spans_well_formed": True, "violations": []}}
+    assert bench.compare_results(good, good, tolerance=0.25) == []
+    assert bench.compare_results(good, {"presets": {}}) == []
+
+    heavy = {"presets": {}, "telemetry": {
+        "overhead_frac": 0.11, "max_overhead_frac": 0.05,
+        "spans_well_formed": True, "violations": []}}
+    regs = bench.compare_results(heavy, good)
+    assert len(regs) == 1 and "overhead" in regs[0]
+
+    torn = {"presets": {}, "telemetry": {
+        "overhead_frac": 0.01, "max_overhead_frac": 0.05,
+        "spans_well_formed": False,
+        "violations": ["rid 3: open spans after terminal"]}}
+    regs = bench.compare_results(torn, good)
+    assert len(regs) == 1 and "well-formed" in regs[0]
+    assert "rid 3" in regs[0]
+
+    # the chaos run's trace is gated through the faults row
+    chaos_torn = {"presets": {}, "faults": {
+        "schedule": "combined", "goodput": 1.0,
+        "all_terminal": True, "no_leaks": True,
+        "telemetry": {"spans_well_formed": False, "violations": []}}}
+    regs = bench.compare_results(chaos_torn, {"presets": {}})
+    assert len(regs) == 1 and "well-formed" in regs[0]
+
+    # legacy current files without the rows: nothing to gate
     assert bench.compare_results({"presets": {}}, good) == []
 
 
